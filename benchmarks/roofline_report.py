@@ -1,0 +1,83 @@
+"""§Roofline report: reads the cached dry-run JSONs and emits the full
+(arch x shape x mesh) table with the three terms, dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs utilization ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.specs import SHAPES
+from repro.analysis.flops import model_flops_cell, active_params
+
+RESULTS = Path(__file__).parent / "results"
+DRYRUN = RESULTS / "dryrun"
+
+
+def load_cells(mesh="16x16"):
+    rows = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            f = DRYRUN / f"{arch}_{shape}_{mesh}.json"
+            if not f.exists():
+                continue
+            rec = json.loads(f.read_text())
+            rows.append(rec)
+    return rows
+
+
+def report(mesh="16x16", out_name="roofline_table.md"):
+    rows = load_cells(mesh)
+    lines = [
+        f"### Roofline — mesh {mesh} (v5e: 197 TF/s bf16, 819 GB/s HBM, "
+        "50 GB/s/link ICI)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "MODEL_FLOPS/HLO | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    table = []
+    for rec in rows:
+        arch, shape = rec["arch"], rec["shape"]
+        if rec["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                         f"skipped: sub-quadratic-only shape |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                         f"ERROR {rec.get('error', '')[:60]} |")
+            continue
+        roof = rec["roofline"]
+        mf = model_flops_cell(get_config(arch), SHAPES[shape])
+        ratio = mf / max(roof["flops"], 1.0)
+        util = roof["flops"] and mf / roof["flops"]
+        lines.append(
+            f"| {arch} | {shape} | {roof['compute_s']:.4f} | "
+            f"{roof['memory_s']:.4f} | {roof['collective_s']:.4f} | "
+            f"{roof['dominant']} | {ratio:.2f} | |")
+        table.append(dict(arch=arch, shape=shape, **roof,
+                          model_flops=mf, useful_ratio=ratio))
+    md = "\n".join(lines)
+    (RESULTS / out_name).write_text(md)
+    (RESULTS / out_name.replace(".md", ".json")).write_text(
+        json.dumps(table, indent=1))
+    return md, table
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        md, table = report(mesh, f"roofline_{mesh}.md")
+        n = len(table)
+        dom = {}
+        for r in table:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        print(f"[roofline] mesh {mesh}: {n} cells, dominance {dom}")
+        worst = sorted(table, key=lambda r: -max(
+            r["memory_s"], r["collective_s"], r["compute_s"]))[:3]
+        for w in worst:
+            print(f"  slowest: {w['arch']} {w['shape']} "
+                  f"bound={w['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

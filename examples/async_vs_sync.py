@@ -1,0 +1,50 @@
+"""Paper Table-1-style experiment at full Stanford-Web scale (281,903 pages,
+~2.31M links) — the paper's own end-to-end workload.
+
+    PYTHONPATH=src python examples/async_vs_sync.py [--procs 2 4 6]
+
+Simulated testbed is calibrated to the paper's (900 MHz Pentium cluster,
+10 Mbps shared Ethernet) so the sync/async trade-off is comparable; see
+EXPERIMENTS.md §Paper-repro for the side-by-side numbers.
+"""
+import argparse
+
+import numpy as np
+
+from repro.graph.generate import stanford_web_replica
+from repro.graph.csr import TransitionT
+from repro.graph.google import GoogleOperator
+from repro.core import AsyncFixedPoint, DESConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--procs", type=int, nargs="+", default=[2, 4, 6])
+    ap.add_argument("--policy", default="all_to_all",
+                    choices=["all_to_all", "ring", "adaptive"])
+    args = ap.parse_args()
+
+    print("building the Stanford-Web replica (n=281,903, nnz~2.31M) ...")
+    g = stanford_web_replica(seed=0)
+    op = GoogleOperator(pt=TransitionT.from_graph(g), alpha=0.85)
+    afp = AsyncFixedPoint(op, kind="power")
+
+    print(f"{'p':>3} {'sync it':>8} {'sync t':>8} {'async it':>12} "
+          f"{'async t':>16} {'speedup':>8} {'imports %':>12}")
+    for p in args.procs:
+        cfg = DESConfig(tol=1e-6, norm="l2", barrier_overhead=0.5,
+                        comm_policy=args.policy, seed=7)
+        s = afp.solve_des_sync(p=p, cfg=cfg)
+        a = afp.solve_des(p=p, cfg=cfg)
+        su = s.time / max(a.local_conv_time.max(), 1e-9)
+        print(f"{p:>3} {s.iters:>8} {s.time:>8.1f} "
+              f"[{a.iters.min():>4},{a.iters.max():>4}] "
+              f"[{a.local_conv_time.min():>6.1f},"
+              f"{a.local_conv_time.max():>6.1f}] {su:>8.2f} "
+              f"{np.round(a.completed_import_pct).astype(int)}")
+        print(f"    local tol 1e-6 -> global residual inf-norm "
+              f"{a.global_resid_inf:.1e} (paper observed ~5e-5)")
+
+
+if __name__ == "__main__":
+    main()

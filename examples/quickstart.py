@@ -1,0 +1,52 @@
+"""Quickstart: PageRank three ways on a synthetic web graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. exact double-precision reference,
+2. the JAX device-side power method (eq. 4),
+3. the asynchronous DES run (eq. 5/6 with the Fig. 1 protocol),
+and checks they agree on values and on the top-10 ranking.
+"""
+import numpy as np
+
+from repro.graph.generate import powerlaw_webgraph
+from repro.graph.csr import TransitionT
+from repro.graph.google import GoogleOperator, exact_pagerank
+from repro.core import AsyncFixedPoint, DESConfig, rank_of
+
+
+def main():
+    print("building a 50k-page synthetic web graph ...")
+    g = powerlaw_webgraph(n=50_000, target_nnz=400_000, n_dangling=40,
+                          seed=0)
+    op = GoogleOperator(pt=TransitionT.from_graph(g), alpha=0.85)
+
+    print("1) exact reference (numpy/scipy) ...")
+    x_ref = exact_pagerank(op, tol=1e-13)
+
+    print("2) JAX power method (eq. 4) ...")
+    afp = AsyncFixedPoint(op, kind="power")
+    r_sync = afp.solve_sync(tol=1e-10)
+    print(f"   {r_sync.iters} iterations, max|err| = "
+          f"{np.abs(r_sync.x - x_ref).max():.2e}")
+
+    print("3) asynchronous run, 4 heterogeneous UEs (eq. 5) ...")
+    cfg = DESConfig(tol=1e-8, base_flops_rate=1e6, bandwidth=1e8,
+                    ue_speed=[1.0, 0.5, 1.2, 0.8], seed=1)
+    r_async = afp.solve_des(p=4, cfg=cfg)
+    print(f"   per-UE iterations: {r_async.iters.tolist()}, "
+          f"max|err| = {np.abs(r_async.x - x_ref).max():.2e}")
+    print(f"   completed imports %: "
+          f"{[round(float(v)) for v in r_async.completed_import_pct]}")
+
+    top_ref = rank_of(x_ref)[:10]
+    top_async = rank_of(r_async.x)[:10]
+    overlap = len(set(top_ref) & set(top_async))
+    print(f"top-10 pages (exact): {top_ref.tolist()}")
+    print(f"top-10 overlap async vs exact: {overlap}/10")
+    assert overlap >= 9, "async ranking diverged"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving: prefill a batch of prompts, decode with sampling.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-2.7b]
+
+Exercises the per-family KV/state caches (GQA ring buffers, MLA latent
+cache, SSD/RG-LRU recurrent state) through the public ServeEngine.
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "12", "--gen", "24"])
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

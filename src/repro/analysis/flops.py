@@ -1,0 +1,52 @@
+"""Analytic parameter / FLOP accounting for the roofline's MODEL_FLOPS."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from ..models.config import ModelConfig
+from ..models.transformer import model_defs
+from ..models.param import tree_map_defs
+
+
+def _leaf_counts(cfg: ModelConfig):
+    defs = model_defs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree_map_defs(lambda d: int(np.prod(d.shape)), defs))[0]
+    out = []
+    for path, n in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        out.append((key, n))
+    return out
+
+
+def total_params(cfg: ModelConfig, include_embed: bool = True) -> int:
+    return sum(n for k, n in _leaf_counts(cfg)
+               if include_embed or not k.startswith("embed"))
+
+
+def active_params(cfg: ModelConfig, include_embed: bool = False) -> int:
+    """MoE: routed-expert weights count at top_k/n_experts utilization."""
+    total = 0
+    for k, n in _leaf_counts(cfg):
+        if not include_embed and k.startswith("embed"):
+            continue
+        if "/moe/w_" in k or k.endswith("moe/w_gate") or "/moe/" in k and (
+                k.endswith("w_gate") or k.endswith("w_up")
+                or k.endswith("w_down")):
+            n = int(n * cfg.top_k / max(cfg.n_experts, 1))
+        total += n
+    return total
+
+
+def model_flops_cell(cfg: ModelConfig, shape: dict) -> float:
+    """6*N_active*tokens for training, 2*N_active*new_tokens for decode,
+    2*N_active*tokens for prefill."""
+    n = active_params(cfg)
+    if shape["kind"] == "train":
+        tokens = shape["batch"] * shape["seq"]
+        return 6.0 * n * tokens
+    if shape["kind"] == "prefill":
+        tokens = shape["batch"] * shape["seq"]
+        return 2.0 * n * tokens
+    return 2.0 * n * shape["batch"]  # decode: one token per sequence

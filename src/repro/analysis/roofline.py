@@ -1,0 +1,183 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD HLO text and sum the
+*operand* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (a symbol table of result shapes resolves
+operand names). A refined per-chip model (ring-algorithm factors, group
+sizes from replica_groups) is reported alongside.
+
+Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# --- v5e hardware constants (per chip) ---
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_LINK_BW = 50e9              # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = bf16[1,2,3]{...} op-name(...)` | tuple results `(f32[..], ..)`
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[a-z0-9_]+\[[^=]*?)\s+"
+    r"([\w\-]+)\((.*)$", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_OPERAND_RE = re.compile(r"%?([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: Dict[str, int]
+    per_chip_bytes: Dict[str, int]   # refined ring-model estimate
+    counts: Dict[str, int]
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_per_chip_bytes(self) -> int:
+        return sum(self.per_chip_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    sizes: Dict[str, int] = {}
+    operand_bytes = {c: 0 for c in _COLLECTIVES}
+    per_chip = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+
+    for m in _DEF_RE.finditer(hlo_text):
+        name, type_str, op, args = m.groups()
+        nbytes = _shape_bytes(type_str)
+        sizes[name] = nbytes
+        base = op.split(".")[0]
+        if base.endswith("-start"):
+            base = base[:-6]
+        if base.endswith("-done"):
+            continue  # counted at -start
+        if base not in _COLLECTIVES:
+            continue
+        counts[base] += 1
+
+        # group size from replica_groups (first group)
+        g = _GROUPS_RE.search(args)
+        n = len(g.group(1).split(",")) if g else 1
+
+        # operand sizes (resolve via symbol table; fall back to result size).
+        # operands live before the closing paren of the op call; config
+        # attributes (replica_groups=..., channel_id=...) come after.
+        operand_str = args.split(")")[0]
+        op_bytes = 0
+        for om in _OPERAND_RE.finditer(operand_str):
+            nm = om.group(1)
+            if nm in sizes:
+                op_bytes += sizes[nm]
+        if op_bytes == 0:
+            op_bytes = nbytes
+
+        operand_bytes[base] += op_bytes
+        if base == "all-reduce":
+            per_chip[base] += int(2 * op_bytes * (n - 1) / max(n, 1))
+        elif base == "all-gather":
+            per_chip[base] += int(nbytes * (n - 1) / max(n, 1))
+        elif base == "reduce-scatter":
+            per_chip[base] += int(op_bytes * (n - 1) / max(n, 1))
+        elif base == "all-to-all":
+            per_chip[base] += int(op_bytes * (n - 1) / max(n, 1))
+        else:  # collective-permute
+            per_chip[base] += op_bytes
+
+    return CollectiveStats(operand_bytes=operand_bytes,
+                           per_chip_bytes=per_chip, counts=counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float          # operand-sum (assignment definition)
+    collective_per_chip: float       # refined estimate
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return dict(
+            flops=self.flops, hbm_bytes=self.hbm_bytes,
+            collective_bytes=self.collective_bytes,
+            collective_per_chip=self.collective_per_chip,
+            chips=self.chips, compute_s=self.compute_s,
+            memory_s=self.memory_s, collective_s=self.collective_s,
+            dominant=self.dominant)
+
+
+def model_flops(n_params_active: int, n_tokens: int,
+                train: bool = True) -> float:
+    """6*N*D (train fwd+bwd) or 2*N*D (inference forward)."""
+    return (6.0 if train else 2.0) * n_params_active * n_tokens
+
+
+def from_compiled(compiled, chips: int, hlo_text: Optional[str] = None
+                  ) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    tx = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    return Roofline(flops=flops, hbm_bytes=tx,
+                    collective_bytes=float(coll.total_operand_bytes),
+                    collective_per_chip=float(coll.total_per_chip_bytes),
+                    chips=chips), coll

@@ -1,0 +1,30 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+from typing import Dict
+
+from ..models.config import ModelConfig
+
+from . import (paligemma_3b, recurrentgemma_2b, mamba2_2p7b, smollm_360m,
+               qwen1p5_4b, minitron_4b, yi_6b, qwen2_moe_a2p7b,
+               deepseek_v3_671b, whisper_base)
+
+_MODULES = [paligemma_3b, recurrentgemma_2b, mamba2_2p7b, smollm_360m,
+            qwen1p5_4b, minitron_4b, yi_6b, qwen2_moe_a2p7b,
+            deepseek_v3_671b, whisper_base]
+
+REGISTRY: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+SMOKE_REGISTRY: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.SMOKE for m in _MODULES}
+
+ARCH_NAMES = list(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    return REGISTRY[name]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return SMOKE_REGISTRY[name]

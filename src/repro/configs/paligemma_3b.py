@@ -1,0 +1,21 @@
+"""PaliGemma-3B — SigLIP + Gemma VLM [arXiv:2407.07726; hf].
+
+The transformer BACKBONE only (Gemma-2B-style decoder): the SigLIP vision
+frontend is a STUB — input_specs() provides 256 precomputed patch embeddings
+that enter as a bidirectional prefix (prefix-LM mask)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b", family="vlm",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=257_216, act="gelu_glu",
+    block_pattern=("attn",), prefix_len=256, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="paligemma-3b-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+    d_ff=128, vocab_size=512, act="gelu_glu",
+    block_pattern=("attn",), prefix_len=8, attn_chunk_q=16,
+    param_dtype="float32", compute_dtype="float32",
+)

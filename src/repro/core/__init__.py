@@ -1,0 +1,20 @@
+"""Core: asynchronous iterative fixed-point computation (the paper's
+contribution) — engine facade, DES + SPMD flavors, termination protocol."""
+from .engine import AsyncFixedPoint
+from .des import AsyncDES, DESConfig, AsyncResult, SyncResult, \
+    PageRankBlockOperator
+from .partition import Partition, block_rows, balanced_nnz
+from .pagerank import solve_power, solve_linear, SolveResult, rank_of, \
+    kendall_tau_topk
+from .spmd import solve_spmd, SPMDConfig, SPMDResult
+from .termination import ComputingUEState, MonitorState, Msg, \
+    CentralizedProtocol, TreeProtocol, TreeNodeState
+
+__all__ = [
+    "AsyncFixedPoint", "AsyncDES", "DESConfig", "AsyncResult", "SyncResult",
+    "PageRankBlockOperator", "Partition", "block_rows", "balanced_nnz",
+    "solve_power", "solve_linear", "SolveResult", "rank_of",
+    "kendall_tau_topk", "solve_spmd", "SPMDConfig", "SPMDResult",
+    "ComputingUEState", "MonitorState", "Msg", "CentralizedProtocol",
+    "TreeProtocol", "TreeNodeState",
+]

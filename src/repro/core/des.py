@@ -1,0 +1,504 @@
+"""Discrete-event simulation of asynchronous iterative computation (eq. 5).
+
+This is the *faithful* reproduction layer: per-UE clocks with heterogeneous
+compute rates, a shared-medium network with per-message service times and
+send-cancellation windows (the paper cancels send()/recv() threads that do
+not complete in time, §6), the exact Fig. 1 termination protocol routed
+through latency channels, and import accounting that reproduces the paper's
+Table 2 (completed-imports percentages).
+
+The same engine drives both the PageRank kernels (eq. 6 power form /
+eq. 7 linear form) and, via the generic BlockOperator protocol, the
+stale-gradient training simulation in repro.training.async_dp.
+
+Semantics map (paper -> here):
+  UE i owns fragment x_{i}                -> Partition block i
+  x_{j}(tau_j^i(t)) stale imports         -> UE.local_view + version table
+  compute phase                           -> "iter" events, duration ~ rate_i
+  send threads (may be canceled)          -> Channel.send with cancel_window
+  CONVERGE/DIVERGE/STOP (Fig. 1)          -> ctrl messages through the medium
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+from .partition import Partition, slice_transition
+from .termination import ComputingUEState, MonitorState, Msg
+from ..graph.google import GoogleOperator
+
+
+# --------------------------------------------------------------------------
+# Operator protocol
+# --------------------------------------------------------------------------
+class BlockOperator(Protocol):
+    """f_i of eq. (5): update one fragment from a (stale) full view."""
+
+    def update_block(self, i: int, x_full: np.ndarray) -> np.ndarray: ...
+
+    def block_work(self, i: int) -> float:
+        """Relative compute cost of block i (for the clock model)."""
+        ...
+
+
+class PageRankBlockOperator:
+    """Eq. (6) power form (`kind='power'`) or eq. (7) linear form
+    (`kind='linear'`) restricted to rows of a partition block."""
+
+    def __init__(self, op: GoogleOperator, part: Partition,
+                 kind: str = "power"):
+        assert kind in ("power", "linear")
+        self.op = op
+        self.part = part
+        self.kind = kind
+        self.n = op.n
+        pt_sp = op.to_scipy_pt()
+        v = op.teleport()
+        self._blocks = []
+        for i in range(part.p):
+            s, e = part.block(i)
+            self._blocks.append(dict(
+                pt_rows=pt_sp[s:e],          # rows of P^T for this block
+                v=v[s:e],
+                rows=(s, e),
+                nnz=pt_sp.indptr[e] - pt_sp.indptr[s],
+            ))
+        self._dangling = op.pt.dangling
+        self._alpha = op.alpha
+
+    def update_block(self, i: int, x_full: np.ndarray) -> np.ndarray:
+        blk = self._blocks[i]
+        dangling_mass = float(x_full[self._dangling].sum())
+        y = self._alpha * (blk["pt_rows"] @ x_full)
+        y += self._alpha * dangling_mass / self.n
+        if self.kind == "power":
+            y += (1.0 - self._alpha) * float(x_full.sum()) * blk["v"]
+        else:
+            y += (1.0 - self._alpha) * blk["v"]
+        return y
+
+    def block_work(self, i: int) -> float:
+        return float(max(self._blocks[i]["nnz"], 1))
+
+
+# --------------------------------------------------------------------------
+# Config / result containers
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class DESConfig:
+    tol: float = 1e-6
+    norm: str = "inf"                 # local-convergence norm: "inf" | "l1"
+    max_iters: int = 100_000
+    # --- clock model ---
+    # Calibrated to the paper's testbed (900 MHz Pentium, Java/MTJ SpMV).
+    # Back-solved from Table 1: async p=2 runs ~68 iters in ~90 s on a
+    # 1.16M-nnz half-block => ~9e5 edge-ops/s; with the shared-medium
+    # exchange model this also reproduces the sync column (4.1/7.5/9.2 s
+    # per iteration at p=2/4/6).
+    base_flops_rate: float = 9e5      # "useful edge-ops per second" per UE
+    ue_speed: Optional[List[float]] = None  # relative speeds (len p)
+    jitter_sigma: float = 0.1         # lognormal per-iteration jitter
+    # --- network model (shared medium, paper used 10 Mbps Ethernet) ---
+    bandwidth: float = 1.25e6         # bytes/s on the shared medium
+    msg_latency: float = 2e-3         # per message propagation latency (s)
+    bytes_per_entry: int = 8
+    ctrl_bytes: int = 64
+    cancel_window: Optional[float] = 1.0  # cancel sends not started in time
+    # --- per-UE message-handling costs (on the compute thread) ---
+    # The paper's Java system serializes fragments into send buffers and
+    # deserializes imports on arrival; back-solved from Table 1 this adds
+    # ~0.8 s/iter at p=4 on top of 0.64 s of SpMV. Modeled as per-byte costs.
+    send_cost_per_byte: float = 2e-7   # ~5 MB/s serialize
+    recv_cost_per_byte: float = 2e-7   # ~5 MB/s deserialize
+    iter_overhead: float = 0.02        # thread-pool/GC per-iteration cost
+    # --- protocol ---
+    pc_max_compute: int = 1
+    pc_max_monitor: int = 1
+    # --- ranking-aware termination (beyond-paper; operationalizes the
+    # paper's §5.2 open question). The monitor periodically assembles the
+    # owner fragments and STOPs once the top-k ordering is stable —
+    # typically far earlier than a value-accuracy threshold. The assembly
+    # channel is modeled out-of-band (idealization noted in EXPERIMENTS).
+    rank_stop_k: Optional[int] = None
+    rank_stop_tau: float = 0.999
+    rank_stop_interval: float = 5.0   # sim seconds between assemblies
+    rank_stop_patience: int = 2
+    # --- communication policy ---
+    comm_policy: str = "all_to_all"   # all_to_all | ring | adaptive
+    adaptive_cancel_limit: int = 3    # consecutive cancels before backoff
+    adaptive_max_backoff: int = 16
+    # --- barrier model for the synchronous run ---
+    barrier_overhead: float = 5e-3
+    # power-form PageRank converges up to scale and is renormalized on
+    # assembly; generic operators (e.g. stale-gradient SGD) must not be.
+    normalize: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class AsyncResult:
+    p: int
+    iters: np.ndarray                 # (p,) iterations executed at STOP
+    local_conv_iter: np.ndarray       # (p,) iteration index of local conv.
+    local_conv_time: np.ndarray       # (p,) sim time of local convergence
+    stop_time: float                  # sim time STOP fully delivered
+    imports: np.ndarray               # (p, p) delivered fragment counts
+    attempts: np.ndarray              # (p, p) attempted sends
+    completed_import_pct: np.ndarray  # (p,) row-average delivered/expected
+    x: np.ndarray                     # assembled final iterate (normalized)
+    global_resid_l1: float            # ||G x - x||_1 of the assembled vector
+    global_resid_inf: float
+    max_staleness: int                # max observed version lag (iterations)
+    rank_stop_time: float = float("nan")  # when rank-stability fired
+
+
+@dataclasses.dataclass
+class SyncResult:
+    p: int
+    iters: int
+    time: float
+    x: np.ndarray
+    global_resid_l1: float
+    global_resid_inf: float
+
+
+def _resid(delta: np.ndarray, norm: str) -> float:
+    if norm == "inf":
+        return float(np.abs(delta).max())
+    if norm == "l2":
+        return float(np.sqrt((delta * delta).sum()))
+    return float(np.abs(delta).sum())
+
+
+# --------------------------------------------------------------------------
+# The simulator
+# --------------------------------------------------------------------------
+class AsyncDES:
+    """Asynchronous run of eq. (5) under the DESConfig models."""
+
+    def __init__(self, operator: BlockOperator, part: Partition,
+                 cfg: DESConfig, x0: Optional[np.ndarray] = None,
+                 check_operator: Optional[GoogleOperator] = None):
+        self.opr = operator
+        self.part = part
+        self.cfg = cfg
+        self.p = part.p
+        self.n = part.n
+        self.rng = np.random.default_rng(cfg.seed)
+        self.x0 = (np.full(self.n, 1.0 / self.n) if x0 is None
+                   else np.asarray(x0, dtype=np.float64))
+        self.check_operator = check_operator
+
+        speeds = cfg.ue_speed if cfg.ue_speed is not None else [1.0] * self.p
+        assert len(speeds) == self.p
+        self._compute_time = [
+            operator.block_work(i) / (cfg.base_flops_rate * speeds[i])
+            for i in range(self.p)
+        ]
+
+    # -- clock / network models ------------------------------------------
+    def _iter_duration(self, i: int) -> float:
+        j = self.rng.lognormal(mean=0.0, sigma=self.cfg.jitter_sigma)
+        return self._compute_time[i] * j
+
+    def _frag_bytes(self, i: int) -> int:
+        return int(self.part.sizes()[i]) * self.cfg.bytes_per_entry
+
+    # -- main loop ----------------------------------------------------------
+    def run(self) -> AsyncResult:
+        cfg, p, n = self.cfg, self.p, self.n
+        part = self.part
+
+        # local views: each UE has a full-length stale copy + version table
+        views = [self.x0.copy() for _ in range(p)]
+        frag_version = np.zeros((p, p), dtype=np.int64)   # [ue, frag] version held
+        produced_version = np.zeros(p, dtype=np.int64)
+        iters = np.zeros(p, dtype=np.int64)
+        local_conv_iter = np.full(p, -1, dtype=np.int64)
+        local_conv_time = np.full(p, np.inf)
+        stopped = np.zeros(p, dtype=bool)
+        imports = np.zeros((p, p), dtype=np.int64)
+        attempts = np.zeros((p, p), dtype=np.int64)
+        max_staleness = 0
+
+        ue_states = [ComputingUEState(pc_max=cfg.pc_max_compute)
+                     for _ in range(p)]
+        monitor = MonitorState.create(p, pc_max=cfg.pc_max_monitor)
+
+        # adaptive policy state
+        consec_cancels = np.zeros((p, p), dtype=np.int64)
+        backoff = np.ones((p, p), dtype=np.int64)  # send every `backoff` iters
+
+        # message-handling time accrued on each UE's compute thread since its
+        # last iteration (serialize on send, deserialize on import)
+        handling = np.zeros(p, dtype=np.float64)
+
+        medium_free = 0.0  # shared-medium FIFO
+        events: list = []  # (time, seq, kind, payload)
+        seq = 0
+
+        def push(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(events, (t, seq, kind, payload))
+            seq += 1
+
+        def send(t, src, dst, kind, payload, nbytes):
+            """Route a message through the shared medium. Returns True if
+            the send was accepted (not canceled)."""
+            nonlocal medium_free
+            start = max(t, medium_free)
+            if (cfg.cancel_window is not None
+                    and kind == "data"
+                    and start - t > cfg.cancel_window):
+                return False  # canceled: queueing delay exceeded the window
+            medium_free = start + nbytes / cfg.bandwidth
+            # small random propagation jitter decorrelates arrival order
+            jit = cfg.msg_latency * (1.0 + self.rng.random())
+            push(medium_free + jit, kind, (src, dst, payload))
+            return True
+
+        # bootstrap: all UEs start computing at t=0
+        for i in range(p):
+            push(self._iter_duration(i), "iter", i)
+
+        stop_time = np.inf
+        pending_stop_sent = False
+
+        # ranking-aware termination state
+        last_asm = None
+        rank_stable = 0
+        rank_stop_time = np.nan
+        if cfg.rank_stop_k:
+            push(cfg.rank_stop_interval, "assemble", None)
+
+        def assemble_now():
+            xa = np.empty(n)
+            for j in range(p):
+                sj, ej = part.block(j)
+                xa[sj:ej] = views[j][sj:ej]
+            return xa
+
+        while events:
+            t, _, kind, payload = heapq.heappop(events)
+
+            if kind == "iter":
+                i = payload
+                if stopped[i]:
+                    continue
+                s, e = part.block(i)
+                old_frag = views[i][s:e].copy()
+                new_frag = self.opr.update_block(i, views[i])
+                views[i][s:e] = new_frag
+                iters[i] += 1
+                produced_version[i] += 1
+                frag_version[i, i] = produced_version[i]
+
+                locally_conv = _resid(new_frag - old_frag, cfg.norm) < cfg.tol
+                if locally_conv and local_conv_iter[i] < 0:
+                    local_conv_iter[i] = iters[i]
+                    local_conv_time[i] = t
+                elif not locally_conv:
+                    local_conv_iter[i] = -1
+                    local_conv_time[i] = np.inf
+
+                # Fig. 1 computing-UE machine
+                ue_states[i], msg = ue_states[i].step(locally_conv)
+                if msg is not None:
+                    send(t, i, -1, "ctrl", msg, cfg.ctrl_bytes)
+
+                # data sends to peers (random target order per iteration —
+                # a fixed order lets low-id receivers capture the medium)
+                targets = self.rng.permutation(p)
+                for d in targets:
+                    d = int(d)
+                    if d == i:
+                        continue
+                    if cfg.comm_policy == "ring" and d != (i + 1) % p:
+                        continue
+                    if (cfg.comm_policy == "adaptive"
+                            and iters[i] % backoff[i, d] != 0):
+                        continue
+                    attempts[i, d] += 1
+                    # serialize cost is paid whether or not the send later
+                    # cancels (the buffer is built before the pool submit)
+                    handling[i] += self._frag_bytes(i) * cfg.send_cost_per_byte
+                    ok = send(t, i, d, "data",
+                              (new_frag.copy(), produced_version[i], s, e, i),
+                              self._frag_bytes(i))
+                    if not ok:
+                        consec_cancels[i, d] += 1
+                        if (cfg.comm_policy == "adaptive"
+                                and consec_cancels[i, d] >= cfg.adaptive_cancel_limit):
+                            backoff[i, d] = min(backoff[i, d] * 2,
+                                                cfg.adaptive_max_backoff)
+                            consec_cancels[i, d] = 0
+                    else:
+                        consec_cancels[i, d] = 0
+                        if cfg.comm_policy == "adaptive":
+                            backoff[i, d] = max(1, backoff[i, d] // 2)
+
+                if iters[i] < cfg.max_iters:
+                    dur = (self._iter_duration(i) + cfg.iter_overhead
+                           + handling[i])
+                    handling[i] = 0.0
+                    push(t + dur, "iter", i)
+
+            elif kind == "data":
+                # version bookkeeping is keyed by the fragment OWNER (ring
+                # relays deliver fragments the message sender does not own)
+                src, dst, (frag, version, s, e, owner) = payload
+                if stopped[dst]:
+                    continue
+                if version > frag_version[dst, owner]:
+                    lag = int(produced_version[owner] - version)
+                    max_staleness = max(max_staleness, lag)
+                    views[dst][s:e] = frag
+                    frag_version[dst, owner] = version
+                    imports[dst, owner] += 1
+                    handling[dst] += (e - s) * cfg.bytes_per_entry \
+                        * cfg.recv_cost_per_byte
+                    # Ring relay: a freshly-accepted fragment is forwarded one
+                    # hop, so each version circulates the ring once (<= p-1
+                    # hops) and staleness stays O(p) without all-to-all sends.
+                    if cfg.comm_policy == "ring":
+                        nxt = (dst + 1) % p
+                        if nxt != owner:
+                            send(t, dst, nxt, "data",
+                                 (frag.copy(), version, s, e, owner),
+                                 self._frag_bytes(owner))
+
+            elif kind == "assemble":
+                xa = assemble_now()
+                if last_asm is not None:
+                    k = cfg.rank_stop_k
+                    top_new = np.argsort(-xa)[:k]
+                    top_old = np.argsort(-last_asm)[:k]
+                    union = np.union1d(top_new, top_old)
+                    import scipy.stats as _st
+                    tau, _ = _st.kendalltau(xa[union], last_asm[union])
+                    if np.isfinite(tau) and tau >= cfg.rank_stop_tau:
+                        rank_stable += 1
+                    else:
+                        rank_stable = 0
+                    if (rank_stable >= cfg.rank_stop_patience
+                            and not pending_stop_sent):
+                        pending_stop_sent = True
+                        rank_stop_time = t
+                        for d in range(p):
+                            send(t, -1, d, "stop", None, cfg.ctrl_bytes)
+                last_asm = xa
+                if not pending_stop_sent:
+                    push(t + cfg.rank_stop_interval, "assemble", None)
+
+            elif kind == "ctrl":
+                src, _, msg = payload
+                monitor = monitor.recv(src, msg)
+                monitor, issue_stop = monitor.step()
+                if issue_stop and not pending_stop_sent:
+                    pending_stop_sent = True
+                    for d in range(p):
+                        send(t, -1, d, "stop", None, cfg.ctrl_bytes)
+
+            elif kind == "stop":
+                _, d, _ = payload
+                stopped[d] = True
+                ue_states[d] = ue_states[d].stop()
+                if bool(stopped.all()):
+                    stop_time = t
+                    break
+
+        # assemble the final vector from each owner's freshest fragment
+        x = np.empty(n, dtype=np.float64)
+        for i in range(p):
+            s, e = part.block(i)
+            x[s:e] = views[i][s:e]
+        norm1 = x.sum()
+        if self.cfg.normalize and norm1 > 0:
+            x_assembled = x / norm1  # power form converges up to scale [21]
+        else:
+            x_assembled = x
+
+        resid_l1 = resid_inf = np.nan
+        if self.check_operator is not None:
+            y = self.check_operator.apply_numpy(x_assembled)
+            resid_l1 = float(np.abs(y - x_assembled).sum())
+            resid_inf = float(np.abs(y - x_assembled).max())
+
+        # UEs that were mid-divergence when STOP arrived (the race the
+        # persistence counters mitigate): credit them with the stop time.
+        final_stop = float(stop_time if np.isfinite(stop_time)
+                           else local_conv_time[np.isfinite(local_conv_time)].max()
+                           if np.isfinite(local_conv_time).any() else 0.0)
+        local_conv_time = np.where(np.isfinite(local_conv_time),
+                                   local_conv_time, final_stop)
+        local_conv_iter = np.where(local_conv_iter >= 0, local_conv_iter,
+                                   iters)
+
+        expected = np.maximum(iters[None, :].repeat(p, 0), 1)  # sender iters
+        with np.errstate(divide="ignore", invalid="ignore"):
+            pct = imports / expected
+        off_diag = ~np.eye(p, dtype=bool)
+        completed_pct = np.array([
+            100.0 * pct[r][off_diag[r]].mean() for r in range(p)
+        ])
+
+        return AsyncResult(
+            p=p, iters=iters, local_conv_iter=local_conv_iter,
+            local_conv_time=local_conv_time,
+            stop_time=float(stop_time if np.isfinite(stop_time) else
+                            local_conv_time.max()),
+            imports=imports, attempts=attempts,
+            completed_import_pct=completed_pct,
+            x=x_assembled, global_resid_l1=resid_l1,
+            global_resid_inf=resid_inf, max_staleness=max_staleness,
+            rank_stop_time=float(rank_stop_time),
+        )
+
+    # -- synchronous baseline ------------------------------------------------
+    def run_sync(self) -> SyncResult:
+        """Barrier-synchronous run under the same clock/network models.
+
+        Per iteration: all UEs compute (barrier waits for the slowest), then
+        the all-to-all fragment exchange is serialized over the shared
+        medium (p*(p-1) messages), plus a barrier overhead.
+        """
+        cfg, p, n = self.cfg, self.p, self.n
+        part = self.part
+        x = self.x0.copy()
+        t = 0.0
+        total_bytes = sum(self._frag_bytes(i) for i in range(p)) * (p - 1)
+        exchange = total_bytes / cfg.bandwidth + 2 * cfg.msg_latency
+
+        # per-iteration serialize/deserialize on the slowest UE
+        handling = max(
+            (p - 1) * self._frag_bytes(i) * cfg.send_cost_per_byte
+            + sum(self._frag_bytes(j) for j in range(p) if j != i)
+            * cfg.recv_cost_per_byte
+            for i in range(p))
+
+        iters = 0
+        while iters < cfg.max_iters:
+            compute = max(self._iter_duration(i) for i in range(p))
+            y = np.empty_like(x)
+            for i in range(p):
+                s, e = part.block(i)
+                y[s:e] = self.opr.update_block(i, x)
+            iters += 1
+            t += compute + exchange + handling + cfg.barrier_overhead
+            conv = _resid(y - x, cfg.norm) < cfg.tol
+            x = y
+            if conv:
+                break
+
+        norm1 = x.sum()
+        x_out = x / norm1 if (self.cfg.normalize and norm1 > 0) else x
+        resid_l1 = resid_inf = np.nan
+        if self.check_operator is not None:
+            gy = self.check_operator.apply_numpy(x_out)
+            resid_l1 = float(np.abs(gy - x_out).sum())
+            resid_inf = float(np.abs(gy - x_out).max())
+        return SyncResult(p=p, iters=iters, time=t, x=x_out,
+                          global_resid_l1=resid_l1, global_resid_inf=resid_inf)

@@ -1,0 +1,60 @@
+"""AsyncFixedPoint — the public facade of the paper's contribution.
+
+One object, three execution flavors:
+
+  solve_sync()  : eq. (4) — synchronous power method / Jacobi on device.
+  solve_des()   : eq. (5) — faithful asynchronous message-level simulation
+                  (heterogeneous UEs, Fig. 1 termination, import accounting).
+  solve_spmd()  : TPU-native bounded-staleness shard_map iteration with
+                  sparsified collective schedules (the deployable form).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .des import AsyncDES, DESConfig, AsyncResult, SyncResult, \
+    PageRankBlockOperator
+from .partition import Partition, block_rows, balanced_nnz
+from .pagerank import solve_power, solve_linear, SolveResult
+from .spmd import solve_spmd, SPMDConfig, SPMDResult
+from ..graph.google import GoogleOperator
+
+
+@dataclasses.dataclass
+class AsyncFixedPoint:
+    op: GoogleOperator
+    kind: str = "power"            # power (eq. 6) | linear (eq. 7)
+    partition: str = "block"       # block (paper) | balanced_nnz
+
+    def make_partition(self, p: int) -> Partition:
+        if self.partition == "balanced_nnz":
+            return balanced_nnz(self.op.pt, p)
+        return block_rows(self.op.n, p)
+
+    def solve_sync(self, tol: float = 1e-9, max_iters: int = 1000,
+                   dtype="float64") -> SolveResult:
+        import jax.numpy as jnp
+        dt = jnp.float64 if dtype == "float64" else jnp.float32
+        fn = solve_power if self.kind == "power" else solve_linear
+        return fn(self.op, tol=tol, max_iters=max_iters, dtype=dt)
+
+    def solve_des(self, p: int, cfg: Optional[DESConfig] = None
+                  ) -> AsyncResult:
+        cfg = cfg or DESConfig()
+        part = self.make_partition(p)
+        opr = PageRankBlockOperator(self.op, part, kind=self.kind)
+        return AsyncDES(opr, part, cfg, check_operator=self.op).run()
+
+    def solve_des_sync(self, p: int, cfg: Optional[DESConfig] = None
+                       ) -> SyncResult:
+        cfg = cfg or DESConfig()
+        part = self.make_partition(p)
+        opr = PageRankBlockOperator(self.op, part, kind=self.kind)
+        return AsyncDES(opr, part, cfg, check_operator=self.op).run_sync()
+
+    def solve_spmd(self, cfg: SPMDConfig) -> SPMDResult:
+        cfg = dataclasses.replace(cfg, kind=self.kind)
+        return solve_spmd(self.op, cfg)

@@ -1,0 +1,115 @@
+"""PageRank solvers (paper §3): synchronous power method (eq. 4) and the
+linear-system Jacobi/Richardson iteration derived from eq. (2), in JAX.
+
+These are the single-program (device-side) solvers; the asynchronous
+counterparts live in core.des (faithful message-level simulation) and
+core.spmd (TPU-native bounded-staleness shard_map flavor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..graph.google import GoogleOperator
+from ..graph.csr import pt_matvec
+
+
+@dataclasses.dataclass
+class SolveResult:
+    x: np.ndarray
+    iters: int
+    resid_l1: float
+
+
+def _google_apply(dev: dict, x: jax.Array, alpha: float, n: int,
+                  linear: bool) -> jax.Array:
+    y = alpha * pt_matvec(dev, x, n)
+    dangling_mass = jnp.sum(jnp.where(dev["dangling"], x, 0.0))
+    y = y + alpha * dangling_mass / n
+    if linear:
+        y = y + (1.0 - alpha) * dev["v"]
+    else:
+        y = y + (1.0 - alpha) * jnp.sum(x) * dev["v"]
+    return y
+
+
+@partial(jax.jit, static_argnames=("n", "alpha", "linear", "tol", "max_iters"))
+def _solve_jit(dev: dict, x0: jax.Array, *, n: int, alpha: float,
+               linear: bool, tol: float, max_iters: int):
+    def cond(state):
+        _, resid, it = state
+        return jnp.logical_and(resid > tol, it < max_iters)
+
+    def body(state):
+        x, _, it = state
+        y = _google_apply(dev, x, alpha, n, linear)
+        resid = jnp.sum(jnp.abs(y - x))
+        return y, resid, it + 1
+
+    x0 = x0.astype(dev["v"].dtype)
+    state = (x0, jnp.asarray(jnp.inf, dev["v"].dtype), jnp.asarray(0))
+    x, resid, iters = jax.lax.while_loop(cond, body, state)
+    return x, resid, iters
+
+
+def solve_power(op: GoogleOperator, x0: Optional[np.ndarray] = None,
+                tol: float = 1e-9, max_iters: int = 1000,
+                dtype=jnp.float64) -> SolveResult:
+    """Normalization-free power method x <- G x (eq. 4).
+
+    No per-step normalization is needed: G is column-stochastic so ||x||_1
+    is invariant (paper §3) and there is no over/underflow risk.
+    """
+    return _solve(op, x0, tol, max_iters, linear=False, dtype=dtype)
+
+
+def solve_linear(op: GoogleOperator, x0: Optional[np.ndarray] = None,
+                 tol: float = 1e-9, max_iters: int = 1000,
+                 dtype=jnp.float64) -> SolveResult:
+    """Jacobi/Richardson on (I - R) x = b (eq. 2 / eq. 7 sync form)."""
+    return _solve(op, x0, tol, max_iters, linear=True, dtype=dtype)
+
+
+def _solve(op, x0, tol, max_iters, linear, dtype) -> SolveResult:
+    import contextlib
+    # scope x64 to this solve — flipping the global flag poisons later
+    # bf16/f32 model code in the same process
+    ctx = (jax.experimental.enable_x64() if dtype == jnp.float64
+           else contextlib.nullcontext())
+    with ctx:
+        n = op.n
+        dev = op.device_arrays(dtype=dtype)
+        if x0 is None:
+            x0 = jnp.full((n,), 1.0 / n, dtype=dtype)
+        else:
+            x0 = jnp.asarray(x0, dtype=dtype)
+        x, resid, iters = _solve_jit(dev, x0, n=n, alpha=float(op.alpha),
+                                     linear=linear, tol=tol,
+                                     max_iters=max_iters)
+    x = np.asarray(x, dtype=np.float64)
+    s = x.sum()
+    if s > 0:
+        x = x / s
+    return SolveResult(x=x, iters=int(iters), resid_l1=float(resid))
+
+
+def rank_of(x: np.ndarray) -> np.ndarray:
+    """Page ranking (descending PageRank value) — what actually matters for
+    retrieval (paper §5.2: 'what is important are not the accurate values
+    ... but their relative ranking')."""
+    return np.argsort(-x, kind="stable")
+
+
+def kendall_tau_topk(x: np.ndarray, y: np.ndarray, k: int = 1000) -> float:
+    """Kendall-tau-b between two rankings restricted to the union of their
+    top-k pages. Quantifies the paper's open question about relaxed
+    thresholds vs rank quality."""
+    import scipy.stats as st
+    top = np.union1d(rank_of(x)[:k], rank_of(y)[:k])
+    tau, _ = st.kendalltau(x[top], y[top])
+    return float(tau)

@@ -1,0 +1,144 @@
+"""CSR web-graph containers and JAX-friendly sparse matvec.
+
+The adjacency matrix A (A[i, j] = 1 iff page i links to page j) is stored in
+CSR over *rows* (out-links). PageRank iterates with P^T (in-links weighted by
+1/outdeg), so we also materialize the transpose in CSR form once; the
+per-iteration matvec is then a pure gather + segment-sum, which maps onto the
+TPU (and onto the block-CSR Pallas kernel in repro.kernels.bsr_spmv).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import scipy.sparse as sp
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Unweighted directed graph in CSR (row = source page, col = target)."""
+
+    n: int
+    indptr: np.ndarray   # int64 (n + 1,)
+    indices: np.ndarray  # int32 (nnz,)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    @property
+    def dangling_mask(self) -> np.ndarray:
+        """d_i = 1 iff deg(i) == 0 (the paper's dangling index vector)."""
+        return (self.out_degree == 0)
+
+    def to_scipy(self) -> sp.csr_matrix:
+        data = np.ones(self.nnz, dtype=np.float64)
+        return sp.csr_matrix((data, self.indices, self.indptr), shape=(self.n, self.n))
+
+    @staticmethod
+    def from_scipy(m: sp.spmatrix) -> "CSRGraph":
+        m = m.tocsr().astype(bool).astype(np.int8)
+        m.sum_duplicates()
+        return CSRGraph(
+            n=m.shape[0],
+            indptr=np.asarray(m.indptr, dtype=np.int64),
+            indices=np.asarray(m.indices, dtype=np.int32),
+        )
+
+    @staticmethod
+    def from_edges(n: int, src: np.ndarray, dst: np.ndarray) -> "CSRGraph":
+        """Build from an edge list, removing duplicate and self-referential
+        bookkeeping is left to the caller (duplicates removed here)."""
+        key = src.astype(np.int64) * n + dst.astype(np.int64)
+        key = np.unique(key)
+        src_u = (key // n).astype(np.int64)
+        dst_u = (key % n).astype(np.int32)
+        counts = np.bincount(src_u, minlength=n)
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return CSRGraph(n=n, indptr=indptr, indices=dst_u)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionT:
+    """P^T in CSR over rows (row j = in-links of page j, weighted 1/outdeg).
+
+    This is the per-iteration operator of the paper: (P^T x)_j aggregates the
+    rank mass flowing into page j. Stored padded-flat so every array has a
+    static shape under jit.
+    """
+
+    n: int
+    indptr: np.ndarray    # int64 (n + 1,)
+    src: np.ndarray       # int32 (nnz,) source page per in-edge
+    weight: np.ndarray    # float (nnz,) = 1 / outdeg(src)
+    row_ids: np.ndarray   # int32 (nnz,) destination page per in-edge
+    dangling: np.ndarray  # bool (n,)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.src.shape[0])
+
+    @staticmethod
+    def from_graph(g: CSRGraph, dtype=np.float64) -> "TransitionT":
+        deg = g.out_degree
+        # row ids of A (source of each edge), expanded from indptr
+        src_of_edge = np.repeat(np.arange(g.n, dtype=np.int64), deg)
+        dst_of_edge = g.indices.astype(np.int64)
+        w = 1.0 / deg[src_of_edge]
+        # sort edges by destination -> CSR of P^T
+        order = np.argsort(dst_of_edge, kind="stable")
+        dst_sorted = dst_of_edge[order]
+        counts = np.bincount(dst_sorted, minlength=g.n)
+        indptr = np.zeros(g.n + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return TransitionT(
+            n=g.n,
+            indptr=indptr,
+            src=src_of_edge[order].astype(np.int32),
+            weight=w[order].astype(dtype),
+            row_ids=dst_sorted.astype(np.int32),
+            dangling=g.dangling_mask,
+        )
+
+    def to_scipy(self) -> sp.csr_matrix:
+        return sp.csr_matrix(
+            (np.asarray(self.weight, dtype=np.float64), self.src, self.indptr),
+            shape=(self.n, self.n),
+        )
+
+    # ---- device-side (JAX) matvec --------------------------------------
+    def device_arrays(self):
+        """Arrays needed on device for the segment-sum matvec."""
+        return dict(
+            src=jnp.asarray(self.src),
+            weight=jnp.asarray(self.weight),
+            row_ids=jnp.asarray(self.row_ids),
+        )
+
+
+def pt_matvec(dev: dict, x: jax.Array, n: int) -> jax.Array:
+    """y = P^T x as gather + segment-sum (TPU-friendly; no scatter).
+
+    dev comes from TransitionT.device_arrays().
+    """
+    contrib = dev["weight"] * x[dev["src"]]
+    return jax.ops.segment_sum(contrib, dev["row_ids"], num_segments=n)
+
+
+def pt_matvec_block(dev_block: dict, x: jax.Array, block_size: int,
+                    row_offset: int) -> jax.Array:
+    """(P^T x) restricted to rows [row_offset, row_offset + block_size).
+
+    dev_block holds the edge slice for those rows with row_ids already
+    rebased to the block (see core.partition.slice_transition).
+    """
+    contrib = dev_block["weight"] * x[dev_block["src"]]
+    return jax.ops.segment_sum(contrib, dev_block["row_ids"], num_segments=block_size)

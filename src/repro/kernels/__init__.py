@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §3):
+bsr_spmv (the paper's SpMV) and flash_attention (LM prefill)."""

@@ -1,0 +1,4 @@
+from .ops import (BSRMatrix, build_bsr, bsr_from_transition, pad_x, unpad_y,
+                  spmv)
+from .bsr_spmv import bsr_spmv
+from .ref import bsr_spmv_ref

@@ -1,0 +1,81 @@
+"""Block-CSR SpMV Pallas TPU kernel — the paper's per-iteration hot spot.
+
+Hardware adaptation (DESIGN.md §3): a GPU CSR SpMV is a gather-heavy,
+warp-per-row pattern with no TPU analogue; the MXU wants dense 128x128
+tiles. We therefore store P^T (or any G-block) as *block*-CSR with dense
+(bm, bn) = (128, 128) blocks and give every block-row a fixed budget of K
+nonzero blocks (padding with zero blocks keeps the grid static — XLA/Pallas
+needs static shapes). Web graphs with strong intra-site locality put most
+mass near the diagonal, so real K is small.
+
+Kernel structure:
+  grid = (n_block_rows, K); the x block consumed by grid step (i, k) is
+  selected by the *scalar-prefetched* blk_cols[i, k] — Pallas loads it
+  HBM->VMEM ahead of the MXU multiply. Accumulation over k happens in the
+  output VMEM block (revisited across the K inner steps).
+
+  x carries nv lanes (n_block_cols, bn, nv): multi-vector SpMV amortizes the
+  block loads over several teleportation vectors — the paper's
+  personalization use-case ([17]) — and gives the MXU a (128, 128) @
+  (128, nv) shape instead of a mat-vec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _kernel(blk_cols_ref, blocks_ref, x_ref, o_ref):
+    """One (block-row i, slot k) step: o[i] += blocks[i,k] @ x[cols[i,k]]."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = blocks_ref[0, 0]          # (bm, bn)
+    xb = x_ref[0]                   # (bn, nv)
+    o_ref[0] += jnp.dot(blk, xb, preferred_element_type=jnp.float32
+                        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_spmv(blocks: jax.Array, blk_cols: jax.Array, x: jax.Array,
+             interpret: bool = False) -> jax.Array:
+    """y[i] = sum_k blocks[i, k] @ x[blk_cols[i, k]].
+
+    blocks:   (nbr, K, bm, bn)
+    blk_cols: (nbr, K) int32 — zero-padded slots MUST point at a valid block
+              column (use 0) with an all-zero data block.
+    x:        (nbc, bn, nv)
+    returns   (nbr, bm, nv) float32
+    """
+    nbr, K, bm, bn = blocks.shape
+    nbc, bn2, nv = x.shape
+    assert bn == bn2, (bn, bn2)
+
+    grid = (nbr, K)
+    out_shape = jax.ShapeDtypeStruct((nbr, bm, nv), jnp.float32)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bm, bn), lambda i, k, cols: (i, k, 0, 0)),
+                pl.BlockSpec((1, bn, nv), lambda i, k, cols: (cols[i, k], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, nv), lambda i, k, cols: (i, 0, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(blk_cols, blocks, x)

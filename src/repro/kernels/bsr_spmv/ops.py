@@ -1,0 +1,122 @@
+"""Jit'd wrapper + host-side BSR construction for the SpMV kernel."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bsr_spmv import bsr_spmv, DEFAULT_BM, DEFAULT_BN
+from .ref import bsr_spmv_ref
+from ...graph.csr import TransitionT
+
+
+@dataclasses.dataclass(frozen=True)
+class BSRMatrix:
+    """Host container: block-CSR with a fixed blocks-per-row budget."""
+    n_rows: int                 # logical (unpadded) rows
+    n_cols: int
+    bm: int
+    bn: int
+    blocks: np.ndarray          # (nbr, K, bm, bn) float32
+    blk_cols: np.ndarray        # (nbr, K) int32
+    fill_ratio: float           # nnz / dense-block capacity actually used
+
+    @property
+    def nbr(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.blocks.shape[1]
+
+    def device(self) -> Tuple[jax.Array, jax.Array]:
+        return jnp.asarray(self.blocks), jnp.asarray(self.blk_cols)
+
+
+def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              n_rows: int, n_cols: int, bm: int = DEFAULT_BM,
+              bn: int = DEFAULT_BN, k_budget: Optional[int] = None
+              ) -> BSRMatrix:
+    """Pack COO triplets into the fixed-budget BSR layout.
+
+    If a block-row holds more distinct nonzero block-columns than k_budget,
+    the budget is raised to the max (the kernel needs a static K).
+    """
+    nbr = -(-n_rows // bm)
+    nbc = -(-n_cols // bn)
+    brow = rows // bm
+    bcol = cols // bn
+    key = brow.astype(np.int64) * nbc + bcol
+    uniq, inv = np.unique(key, return_inverse=True)
+    ub_row = (uniq // nbc).astype(np.int64)
+    ub_col = (uniq % nbc).astype(np.int32)
+
+    per_row = np.bincount(ub_row, minlength=nbr)
+    K = int(per_row.max()) if k_budget is None else max(k_budget,
+                                                        int(per_row.max()))
+    K = max(K, 1)
+
+    # slot of each unique block within its block-row
+    order = np.argsort(ub_row, kind="stable")
+    slot_sorted = np.arange(len(uniq)) - np.concatenate(
+        [[0], np.cumsum(per_row)])[ub_row[order]]
+    slot = np.empty(len(uniq), dtype=np.int64)
+    slot[order] = slot_sorted
+
+    est = nbr * K * bm * bn * 4
+    if est > 8 << 30:
+        raise MemoryError(
+            f"BSR dense-block array would be {est/1e9:.1f} GB "
+            f"(K={K}); use balanced partitioning or larger blocks")
+    blocks = np.zeros((nbr, K, bm, bn), dtype=np.float32)
+    blk_cols = np.zeros((nbr, K), dtype=np.int32)
+    blk_cols[ub_row, slot] = ub_col
+
+    # scatter values into the dense blocks
+    b_of_edge = inv
+    np.add.at(
+        blocks,
+        (ub_row[b_of_edge], slot[b_of_edge], rows % bm, cols % bn),
+        vals.astype(np.float32),
+    )
+    fill = len(rows) / float(len(uniq) * bm * bn)
+    return BSRMatrix(n_rows=n_rows, n_cols=n_cols, bm=bm, bn=bn,
+                     blocks=blocks, blk_cols=blk_cols, fill_ratio=fill)
+
+
+def bsr_from_transition(pt: TransitionT, bm: int = DEFAULT_BM,
+                        bn: int = DEFAULT_BN) -> BSRMatrix:
+    """BSR of P^T (rows = destination pages, cols = source pages)."""
+    return build_bsr(rows=pt.row_ids.astype(np.int64),
+                     cols=pt.src.astype(np.int64),
+                     vals=np.asarray(pt.weight, dtype=np.float32),
+                     n_rows=pt.n, n_cols=pt.n, bm=bm, bn=bn)
+
+
+def pad_x(x: np.ndarray, n_cols: int, bn: int) -> np.ndarray:
+    """(n, nv) or (n,) -> (nbc, bn, nv) padded block layout."""
+    if x.ndim == 1:
+        x = x[:, None]
+    n, nv = x.shape
+    nbc = -(-n_cols // bn)
+    xp = np.zeros((nbc * bn, nv), dtype=x.dtype)
+    xp[:n] = x
+    return xp.reshape(nbc, bn, nv)
+
+
+def unpad_y(y: np.ndarray, n_rows: int) -> np.ndarray:
+    """(nbr, bm, nv) -> (n_rows, nv)."""
+    nbr, bm, nv = y.shape
+    return y.reshape(nbr * bm, nv)[:n_rows]
+
+
+def spmv(bsr: BSRMatrix, x: jax.Array, interpret: bool = False,
+         use_ref: bool = False) -> jax.Array:
+    """y = PT @ x in the padded block layout (device arrays in/out)."""
+    blocks, blk_cols = bsr.device()
+    if use_ref:
+        return bsr_spmv_ref(blocks, blk_cols, x)
+    return bsr_spmv(blocks, blk_cols, x, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the block-CSR SpMV kernel.
+
+Layout (see bsr_spmv.py for the rationale):
+  blocks:   (n_block_rows, K, bm, bn)  dense nonzero blocks, zero-padded
+  blk_cols: (n_block_rows, K) int32    block-column index of each block
+  x:        (n_block_cols, bn, nv)     the iterate(s); nv > 1 computes
+                                        several personalized PageRank
+                                        vectors simultaneously
+  out:      (n_block_rows, bm, nv)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bsr_spmv_ref(blocks: jnp.ndarray, blk_cols: jnp.ndarray,
+                 x: jnp.ndarray) -> jnp.ndarray:
+    nbr, K, bm, bn = blocks.shape
+    # gather the x block for every (row, k): (nbr, K, bn, nv)
+    xg = x[blk_cols]
+    # (nbr, K, bm, bn) @ (nbr, K, bn, nv) -> sum over K -> (nbr, bm, nv)
+    return jnp.einsum("rkmn,rknv->rmv", blocks, xg,
+                      preferred_element_type=jnp.float32)

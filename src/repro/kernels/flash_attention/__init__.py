@@ -1,0 +1,3 @@
+from .flash_attention import flash_attention
+from .ref import mha_ref
+from .ops import attention

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for flash attention with a CPU-safe fallback.
+
+On TPU (the target), `attention(...)` lowers to the Pallas kernel. On this
+CPU container the kernel runs under interpret=True in tests; the production
+model code path uses `chunked_attention_ref` (pure jnp, O(S * block) memory)
+so dry-run lowering stays tractable at 32k/500k sequence lengths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ref import mha_ref
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, scale: float | None = None,
+              use_kernel: bool = True, interpret: bool = False) -> jax.Array:
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal, scale=scale,
+                               interpret=interpret)
+    return mha_ref(q, k, v, causal=causal, scale=scale)

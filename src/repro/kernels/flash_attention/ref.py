@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """q: (B, H, S, D); k, v: (B, Hkv, T, D) with H % Hkv == 0.
+
+    Full-precision reference attention (f32 softmax)."""
+    B, H, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    G = H // Hkv
+    kq = jnp.repeat(k, G, axis=1)
+    vq = jnp.repeat(v, G, axis=1)
+    scale = (D ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), dtype=bool), k=T - S)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vq.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-touching import: jax locks the device count at
+# first backend init. Only the dry-run uses placeholder devices.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_config, ARCH_NAMES
+from ..models.config import ModelConfig
+from ..models.sharding import activation_sharding
+from ..models.decode import decode_step
+from ..models.transformer import forward
+from ..training.optimizer import OptConfig
+from ..training.train_step import make_train_step
+from ..analysis import roofline as rl
+from .mesh import make_production_mesh
+from .specs import (SHAPES, batch_specs, state_specs, params_specs_only,
+                    cache_abstract, cache_pspecs, attach)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def opt_config_for(cfg: ModelConfig) -> OptConfig:
+    # 671B: bf16 moments (ZeRO-1 state fits 16 GB/chip), bf16 grad
+    # accumulation over 8 microbatches (activation peak /8)
+    if "671b" in cfg.name:
+        return OptConfig(opt_dtype="bfloat16", accum_steps=8,
+                         accum_dtype="bfloat16")
+    return OptConfig()
+
+
+def input_specs(arch: str, shape_name: str, mesh, kind=None):
+    """Public helper: attached ShapeDtypeStructs for one cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    kind = kind or sh["kind"]
+    if kind == "train":
+        s_avals, s_specs = state_specs(cfg, opt_config_for(cfg), mesh)
+        b_avals, b_specs = batch_specs(cfg, shape_name, mesh)
+        return (attach(s_avals, s_specs, mesh), attach(b_avals, b_specs, mesh))
+    if kind == "prefill":
+        p_avals, p_specs = params_specs_only(cfg, mesh)
+        b_avals, b_specs = batch_specs(cfg, shape_name, mesh)
+        return (attach(p_avals, p_specs, mesh), attach(b_avals, b_specs, mesh))
+    # decode
+    p_avals, p_specs = params_specs_only(cfg, mesh)
+    b_avals, b_specs = batch_specs(cfg, shape_name, mesh)
+    c_avals = cache_abstract(cfg, shape_name)
+    c_specs = cache_pspecs(cfg, shape_name, mesh, c_avals)
+    return (attach(p_avals, p_specs, mesh),
+            attach(b_avals, b_specs, mesh),
+            attach(c_avals, c_specs, mesh))
+
+
+def step_fn(cfg: ModelConfig, kind: str):
+    if kind == "train":
+        ts = make_train_step(cfg, opt_config_for(cfg))
+        return lambda state, batch: ts(state, batch)
+    if kind == "prefill":
+        def prefill(params, batch):
+            kw = {}
+            if cfg.is_encdec:
+                kw["enc_inputs"] = batch["enc_inputs"]
+            if cfg.prefix_len:
+                kw["prefix_embeds"] = batch["prefix_embeds"]
+            logits, _ = forward(params, cfg, batch["tokens"], **kw)
+            return logits
+        return prefill
+
+    def serve(params, batch, cache):
+        return decode_step(params, cfg, batch["token"], cache)
+    return serve
+
+
+def _body_cost(fn, avals, mesh, multi_pod):
+    """Compile a standalone layer-group body and return its per-device
+    (flops, bytes, collective-operand-bytes, collective-per-chip-bytes)."""
+    with mesh, activation_sharding(multi_pod):
+        comp = jax.jit(fn).lower(*avals).compile()
+        cost = comp.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = rl.parse_collectives(comp.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll.total_operand_bytes),
+            float(coll.total_per_chip_bytes))
+
+
+def scan_corrections(cfg: ModelConfig, shape_name: str, mesh, multi_pod: bool
+                     ) -> dict:
+    """XLA's cost_analysis counts while/scan bodies ONCE, ignoring trip
+    count. We therefore compile each scanned layer-group body standalone and
+    add (repeats - 1) x body_cost to the module numbers. (Methodology noted
+    in EXPERIMENTS.md §Roofline.)"""
+    import dataclasses as dc
+    from ..models.transformer import (stack_plan, _sig, _apply_layer,
+                                      layer_defs, model_defs)
+    from ..models.param import abstract_params, pspec_tree
+    from ..models.decode import _layer_step, init_cache
+    from .specs import cache_abstract, cache_pspecs, _dp
+
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    # gradient accumulation: the module's loop body runs one microbatch;
+    # total work = repeats * accum bodies at the microbatch size
+    accum = opt_config_for(cfg).accum_steps if kind == "train" else 1
+    B = B // accum
+    dt = cfg.dtype()
+    bax_spec = P(_dp(mesh, B), None, None)
+    out = dict(flops=0.0, bytes=0.0, coll=0.0, coll_chip=0.0)
+
+    def add_stack(local_cfg, n_layers, first_dense, causal, seq_len,
+                  cross=False):
+        plan = stack_plan(local_cfg, n_layers, first_dense)
+        if plan.repeats * accum <= 1:
+            return
+        base = len(plan.head)
+        sigs = [_sig(local_cfg, base + j) for j in plan.pattern]
+        group_defs = {f"pos{j}": layer_defs(local_cfg, *sigs[j], cross)
+                      for j in plan.pattern}
+        p_avals = attach(abstract_params(group_defs),
+                         pspec_tree(group_defs, multi_pod), mesh)
+        x_aval = jax.ShapeDtypeStruct(
+            (B, seq_len, local_cfg.d_model), dt,
+            sharding=jax.NamedSharding(mesh, bax_spec))
+        positions = jnp.arange(seq_len)
+
+        if kind == "train":
+            def apply_one(pl_j, x, j):
+                f = lambda p_, x_: _apply_layer(
+                    p_, x_, local_cfg, sigs[j][0], sigs[j][1],
+                    positions=positions, causal=causal)
+                if local_cfg.remat:   # match the module's remat recompute
+                    return jax.checkpoint(f)(pl_j, x)
+                return f(pl_j, x)
+
+            def body(pl, x):
+                def fwd(pl, x):
+                    for j in plan.pattern:
+                        x, _ = apply_one(pl[f"pos{j}"], x, j)
+                    return jnp.sum(x.astype(jnp.float32))
+                g = jax.grad(fwd, argnums=(0, 1))(pl, x)
+                return g
+        else:
+            def body(pl, x):
+                for j in plan.pattern:
+                    x, _ = _apply_layer(
+                        pl[f"pos{j}"], x, local_cfg, sigs[j][0],
+                        sigs[j][1], positions=positions, causal=causal)
+                return x
+        f, b, c, cc = _body_cost(body, (p_avals, x_aval), mesh, multi_pod)
+        mult = plan.repeats * accum - 1
+        out["flops"] += f * mult
+        out["bytes"] += b * mult
+        out["coll"] += c * mult
+        out["coll_chip"] += cc * mult
+
+    def add_decode_stack():
+        plan = stack_plan(cfg, cfg.n_layers, cfg.first_dense_layers)
+        if plan.repeats <= 1:
+            return
+        base = len(plan.head)
+        sigs = [_sig(cfg, base + j) for j in plan.pattern]
+        c_avals_full = cache_abstract(cfg, shape_name)
+        c_specs_full = cache_pspecs(cfg, shape_name, mesh, c_avals_full)
+        # one slice of the stacked cache (drop the leading layer dim)
+        def unstack(a):
+            return jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+        def unstack_spec(s):
+            return P(*s[1:])
+        group_cache = {}
+        for j in plan.pattern:
+            nm = f"pos{j}"
+            av = jax.tree_util.tree_map(
+                unstack, c_avals_full["stack"][nm])
+            sp = jax.tree_util.tree_map(
+                unstack_spec, c_specs_full["stack"][nm],
+                is_leaf=lambda x: isinstance(x, P))
+            group_cache[nm] = attach(av, sp, mesh)
+        group_defs = {f"pos{j}": layer_defs(cfg, *sigs[j], cfg.is_encdec)
+                      for j in plan.pattern}
+        p_avals = attach(abstract_params(group_defs),
+                         pspec_tree(group_defs, multi_pod), mesh)
+        x_aval = jax.ShapeDtypeStruct(
+            (B, 1, cfg.d_model), dt,
+            sharding=jax.NamedSharding(mesh, bax_spec))
+        length = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def body(pl, cl, x, length):
+            for j in plan.pattern:
+                nm = f"pos{j}"
+                x, _ = _layer_step(pl[nm], cl[nm], x, cfg, sigs[j][0],
+                                   sigs[j][1], length)
+            return x
+        f, b, c, cc = _body_cost(
+            body, (p_avals, group_cache, x_aval, length), mesh, multi_pod)
+        mult = plan.repeats - 1
+        out["flops"] += f * mult
+        out["bytes"] += b * mult
+        out["coll"] += c * mult
+        out["coll_chip"] += cc * mult
+
+    if kind in ("train", "prefill"):
+        s_tok = S  # prefix archs: total seq incl. prefix
+        add_stack(cfg, cfg.n_layers, cfg.first_dense_layers, True, s_tok,
+                  cross=cfg.is_encdec)
+        if cfg.is_encdec:
+            enc_cfg = dc.replace(cfg, block_pattern=("attn",), n_experts=0,
+                                 first_dense_layers=0)
+            add_stack(enc_cfg, cfg.n_enc_layers, 0, False,
+                      int(S * cfg.enc_seq_ratio))
+    else:
+        add_decode_stack()
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = RESULTS_DIR, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    ok, why = cfg.supports_shape(shape_name)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_tag)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return _save(rec, out_dir)
+
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    fn = step_fn(cfg, sh["kind"])
+    args = input_specs(arch, shape_name, mesh)
+
+    # buffer donation + explicit out shardings: the new train state aliases
+    # the old (in-place update), the new decode cache aliases the old —
+    # without this XLA double-books state memory (and may replicate the
+    # output cache).
+    def shard_of(tree):
+        return jax.tree_util.tree_map(lambda a: a.sharding, tree)
+
+    repl = jax.NamedSharding(mesh, P())
+    if sh["kind"] == "train":
+        jit_kw = dict(donate_argnums=(0,),
+                      out_shardings=(shard_of(args[0]), repl))
+    elif sh["kind"] == "decode":
+        jit_kw = dict(donate_argnums=(2,),
+                      out_shardings=(None, shard_of(args[2])))
+    else:
+        jit_kw = {}
+
+    t0 = time.time()
+    try:
+        with mesh, activation_sharding(multi_pod):
+            lowered = jax.jit(fn, **jit_kw).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = {}
+            try:
+                ma = compiled.memory_analysis()
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes"):
+                    if hasattr(ma, k):
+                        mem[k] = int(getattr(ma, k))
+                if verbose:
+                    print(f"  memory_analysis: {mem}")
+            except Exception as e:  # CPU backend may not implement it
+                mem = {"error": str(e)}
+
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            text = compiled.as_text()
+            coll = rl.parse_collectives(text)
+
+            flops_dev = float(cost.get("flops", 0.0))
+            bytes_dev = float(cost.get("bytes accessed", 0.0))
+
+            # scan trip-count correction (XLA counts loop bodies once)
+            corr = scan_corrections(cfg, shape_name, mesh, multi_pod)
+            flops_c = flops_dev + corr["flops"]
+            bytes_c = bytes_dev + corr["bytes"]
+            coll_c = float(coll.total_operand_bytes) + corr["coll"]
+            coll_chip_c = float(coll.total_per_chip_bytes) + corr["coll_chip"]
+
+            roof = rl.Roofline(
+                flops=flops_c * chips, hbm_bytes=bytes_c * chips,
+                collective_bytes=coll_c * chips,
+                collective_per_chip=coll_chip_c,
+                chips=chips)
+            rec.update(
+                status="ok", chips=chips, kind=sh["kind"],
+                seconds_lower=round(t_lower, 1),
+                seconds_compile=round(t_compile, 1),
+                memory=mem,
+                flops_per_device_raw=flops_dev,
+                bytes_per_device_raw=bytes_dev,
+                flops_per_device=flops_c,
+                bytes_per_device=bytes_c,
+                scan_correction=corr,
+                collective_operand_bytes_per_device=coll.total_operand_bytes,
+                collective_per_chip_bytes=coll.total_per_chip_bytes,
+                collective_counts=coll.counts,
+                collective_breakdown=coll.operand_bytes,
+                roofline=roof.as_dict(),
+            )
+            if verbose:
+                print(f"  cost: flops/dev={flops_dev:.3e} "
+                      f"bytes/dev={bytes_dev:.3e} "
+                      f"coll/dev={coll.total_operand_bytes:.3e}")
+                print(f"  roofline: compute={roof.compute_s:.4f}s "
+                      f"memory={roof.memory_s:.4f}s "
+                      f"collective={roof.collective_s:.4f}s "
+                      f"-> {roof.dominant}-bound")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"  ERROR {type(e).__name__}: {e}")
+    return _save(rec, out_dir)
+
+
+def _save(rec: dict, out_dir: Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_NAMES} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = "2x16x16" if mp else "16x16"
+                out = RESULTS_DIR / f"{arch}_{shape}_{tag}.json"
+                if args.skip_existing and out.exists():
+                    prev = json.loads(out.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[skip] {arch} {shape} {tag}")
+                        continue
+                print(f"[cell] {arch} {shape} {tag}")
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp)
+                print(f"  -> {rec['status']} in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

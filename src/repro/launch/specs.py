@@ -1,0 +1,157 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch x shape) cell.
+
+Nothing here allocates device memory: params/opt-state/caches are abstract
+(jax.eval_shape / ShapeDtypeStruct), which is what lets a 671B model "fit"
+in a CPU container for lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.param import abstract_params, pspec_tree, resolve_axis
+from ..models.transformer import model_defs
+from ..models.decode import init_cache
+from ..training.optimizer import OptConfig, abstract_opt_state, \
+    opt_state_pspecs
+from .mesh import dp_size, tp_size
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+
+def _dp(mesh, dim: int):
+    """'dp' resolved, or None when the dim does not divide."""
+    multi = "pod" in mesh.axis_names
+    ax = resolve_axis("dp", multi)
+    return ax if dim % dp_size(mesh) == 0 else None
+
+
+def _tp(mesh, dim: int):
+    return "model" if dim % tp_size(mesh) == 0 else None
+
+
+# ----------------------------------------------------------- batch specs ---
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh
+                ) -> Tuple[dict, dict]:
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    dt = cfg.dtype()
+    avals: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    bax = _dp(mesh, B)
+
+    if sh["kind"] in ("train", "prefill"):
+        s_tok = S - cfg.prefix_len if cfg.prefix_len else S
+        avals["tokens"] = jax.ShapeDtypeStruct((B, s_tok), jnp.int32)
+        specs["tokens"] = P(bax, None)
+        if cfg.prefix_len:
+            avals["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.prefix_len, cfg.d_model), dt)
+            specs["prefix_embeds"] = P(bax, None, None)
+        if cfg.is_encdec:
+            s_enc = int(S * cfg.enc_seq_ratio)
+            avals["enc_inputs"] = jax.ShapeDtypeStruct(
+                (B, s_enc, cfg.d_model), dt)
+            specs["enc_inputs"] = P(bax, None, None)
+    else:  # decode
+        avals["token"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        specs["token"] = P(bax)
+    return avals, specs
+
+
+# ----------------------------------------------------------- state specs ---
+def state_specs(cfg: ModelConfig, opt_cfg: OptConfig, mesh
+                ) -> Tuple[dict, dict]:
+    defs = model_defs(cfg)
+    multi = "pod" in mesh.axis_names
+    params_avals = abstract_params(defs)
+    params_specs = pspec_tree(defs, multi_pod=multi,
+                              fsdp_dp=dp_size(mesh) if cfg.fsdp else 0)
+    avals = {"params": params_avals,
+             "opt": abstract_opt_state(params_avals, opt_cfg)}
+    specs = {"params": params_specs,
+             "opt": opt_state_pspecs(defs, opt_cfg, dp_size(mesh),
+                                     multi_pod=multi)}
+    return avals, specs
+
+
+def params_specs_only(cfg: ModelConfig, mesh) -> Tuple[dict, dict]:
+    defs = model_defs(cfg)
+    multi = "pod" in mesh.axis_names
+    return abstract_params(defs), pspec_tree(
+        defs, multi_pod=multi, fsdp_dp=dp_size(mesh) if cfg.fsdp else 0)
+
+
+# ----------------------------------------------------------- cache specs ---
+def cache_abstract(cfg: ModelConfig, shape_name: str) -> dict:
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    defs = model_defs(cfg)
+    aparams = abstract_params(defs)
+
+    if cfg.is_encdec:
+        s_enc = int(S * cfg.enc_seq_ratio)
+        enc_out = jax.ShapeDtypeStruct((B, s_enc, cfg.d_model), cfg.dtype())
+        return jax.eval_shape(
+            lambda p, e: init_cache(cfg, B, S, enc_out=e, params=p),
+            aparams, enc_out)
+    return jax.eval_shape(lambda: init_cache(cfg, B, S))
+
+
+def cache_pspecs(cfg: ModelConfig, shape_name: str, mesh, cache_avals
+                 ) -> Any:
+    sh = SHAPES[shape_name]
+    B = sh["batch"]
+    bax = _dp(mesh, B)
+
+    def rule(path, aval):
+        if not hasattr(aval, "shape") or aval.ndim == 0:
+            return P()
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        name = keys[-1] if keys else ""
+        stacked = "stack" in keys
+        lead = (None,) if stacked else ()
+
+        def spec(*rest):
+            return P(*lead, *rest)
+
+        if name in ("k", "v"):          # (B, Hkv, T, dh) — self or cross
+            T = aval.shape[-2]
+            return spec(bax, None, _tp(mesh, T), None)
+        if name == "c":                  # MLA latent (B, T, r)
+            return spec(bax, _tp(mesh, aval.shape[-2]), None)
+        if name == "kr":
+            return spec(bax, _tp(mesh, aval.shape[-2]), None)
+        if name == "slot_pos":
+            return spec(None)
+        if name == "h" and aval.ndim - len(lead) == 4:   # ssd (B,H,P,N)
+            return spec(bax, _tp(mesh, aval.shape[len(lead) + 1]),
+                        None, None)
+        if name == "h":                  # rglru (B, W)
+            return spec(bax, _tp(mesh, aval.shape[-1]))
+        if name.startswith("conv"):
+            return spec(bax, None, _tp(mesh, aval.shape[-1]))
+        if name == "length":
+            return P()
+        return spec(*([None] * (aval.ndim - len(lead))))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_avals)
+
+
+def attach(avals, specs, mesh):
+    """ShapeDtypeStructs with NamedShardings (for .lower with shardings)."""
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=jax.NamedSharding(mesh, s)),
+        avals, specs)

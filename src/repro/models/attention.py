@@ -1,0 +1,305 @@
+"""Attention: GQA/MQA/MHA, MLA (DeepSeek), local windows, prefix-LM masks.
+
+Two compute paths:
+  * `flash_attn_jnp` — pure-jnp double-scan online-softmax (O(cq*ck) score
+    memory). This is the path the dry-run lowers (CPU backend); on TPU the
+    Pallas kernel in repro.kernels.flash_attention replaces it 1:1 for the
+    causal/full cases.
+  * `decode_attn` — one-token attention over a KV cache (einsum over T with
+    masking; sharding of the cache is the caller's concern).
+
+Masks are position-based so sequence-sharded (context-parallel) callers can
+pass global offsets.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamDef
+from .config import ModelConfig
+from .blocks import rope, rmsnorm, rmsnorm_def
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------- params ----
+def attn_defs(cfg: ModelConfig) -> dict:
+    dt = cfg.pdtype()
+    D, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    d = {
+        "wq": ParamDef((D, H * dh), dt, (None, "tp")),
+        "wk": ParamDef((D, Hkv * dh), dt, (None, "tp")),
+        "wv": ParamDef((D, Hkv * dh), dt, (None, "tp")),
+        "wo": ParamDef((H * dh, D), dt, ("tp", None)),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((H * dh,), dt, ("tp",), init="zeros")
+        d["bk"] = ParamDef((Hkv * dh,), dt, ("tp",), init="zeros")
+        d["bv"] = ParamDef((Hkv * dh,), dt, ("tp",), init="zeros")
+    return d
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    dt = cfg.pdtype()
+    D, H = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "w_dq": ParamDef((D, cfg.q_lora_rank), dt, (None, "tp")),
+        "q_norm": rmsnorm_def(cfg.q_lora_rank, dt),
+        "w_uq": ParamDef((cfg.q_lora_rank, H * qk), dt, (None, "tp")),
+        "w_dkv": ParamDef((D, cfg.kv_lora_rank), dt, (None, None)),
+        "kv_norm": rmsnorm_def(cfg.kv_lora_rank, dt),
+        "w_kr": ParamDef((D, cfg.qk_rope_dim), dt, (None, None)),
+        "w_ukv": ParamDef(
+            (cfg.kv_lora_rank, H * (cfg.qk_nope_dim + cfg.v_head_dim)),
+            dt, (None, "tp")),
+        "wo": ParamDef((H * cfg.v_head_dim, D), dt, ("tp", None)),
+    }
+
+
+# ---------------------------------------------------------------- masks ----
+def _mask(rows: jax.Array, cols: jax.Array, causal: bool,
+          window: Optional[int], prefix_len: int) -> jax.Array:
+    """rows/cols: global positions, broadcastable. True = attend."""
+    ok = jnp.ones(jnp.broadcast_shapes(rows.shape, cols.shape), bool)
+    if causal:
+        ok = cols <= rows
+        if prefix_len:
+            ok = ok | (cols < prefix_len)
+    if window is not None:
+        ok = ok & (cols > rows - window)
+    return ok
+
+
+# ----------------------------------------------- jnp flash (train/prefill) -
+def flash_attn_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   prefix_len: int = 0, q_offset: int = 0,
+                   scale: Optional[float] = None,
+                   chunk_q: int = 512, chunk_k: int = 512) -> jax.Array:
+    """q: (B, H, Sq, Dk); k: (B, Hkv, T, Dk); v: (B, Hkv, T, Dv).
+
+    Double-scan online softmax; returns (B, H, Sq, Dv) in q.dtype."""
+    B, H, Sq, Dk = q.shape
+    _, Hkv, T, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // Hkv
+    scale = (Dk ** -0.5) if scale is None else scale
+
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, T)
+    # pad to chunk multiples; padded kv columns are masked off below
+    Sq_p = -(-Sq // cq) * cq
+    T_p = -(-T // ck) * ck
+    valid_t = T
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    if T_p != T:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, T_p - T), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, T_p - T), (0, 0)))
+    Sq_orig, Sq, T = Sq, Sq_p, T_p
+    nq, nk = Sq // cq, T // ck
+
+    qg = q.reshape(B, Hkv, G, nq, cq, Dk)
+    kc = k.reshape(B, Hkv, nk, ck, Dk)
+    vc = v.reshape(B, Hkv, nk, ck, Dv)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                       # (B,Hkv,G,cq,Dk), scalar
+        rows = q_offset + qidx * cq + jnp.arange(cq)
+
+        # rematerialized in the backward pass: without this, AD saves the
+        # (cq, ck) probability blocks of EVERY scan step (O(S*T) residuals
+        # per layer — tens of GB at 4k/32k)
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kblk, vblk, kidx = kv             # (B,Hkv,ck,Dk/_Dv)
+            cols = kidx * ck + jnp.arange(ck)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk",
+                           qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            ok = _mask(rows[:, None], cols[None, :], causal, window,
+                       prefix_len)
+            ok = ok & (cols < valid_t)[None, :]
+            s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+             jnp.arange(nk)))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return None, (acc / l[..., None]).astype(q.dtype)
+
+    _, out = jax.lax.scan(
+        q_step, None, (qg.transpose(3, 0, 1, 2, 4, 5), jnp.arange(nq)))
+    # out: (nq, B, Hkv, G, cq, Dv)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, H, Sq, Dv)
+    return out[:, :, :Sq_orig]
+
+
+# ----------------------------------------------------------- decode step ---
+def decode_attn(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                cache_len: jax.Array, window: Optional[int] = None,
+                scale: Optional[float] = None) -> jax.Array:
+    """q: (B, H, 1, Dk); caches: (B, Hkv, T, D*). cache_len: filled length
+    (the new token is at position cache_len - 1)."""
+    B, H, _, Dk = q.shape
+    _, Hkv, T, _ = k_cache.shape
+    G = H // Hkv
+    scale = (Dk ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Hkv, G, Dk)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(T)
+    row = cache_len - 1
+    ok = pos <= row
+    if window is not None:
+        ok = ok & (pos > row - window)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, 1, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------- GQA wrapper ----
+def gqa_project(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, D) -> q (B,H,S,dh), k/v (B,Hkv,S,dh) with rope applied by
+    the caller (positions differ between train and decode)."""
+    B, S, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, Hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, dh).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def gqa_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array, causal: bool = True,
+                  window: Optional[int] = None, prefix_len: int = 0
+                  ) -> jax.Array:
+    """Full training/prefill self-attention for one layer."""
+    from .sharding import constrain, current_tp
+    B, S, D = x.shape
+    q, k, v = gqa_project(p, x, cfg)
+    q = rope(q, positions[None, None, :], cfg.rope_theta)
+    k = rope(k, positions[None, None, :], cfg.rope_theta)
+
+    chunk_q = cfg.attn_chunk_q
+    if cfg.attn_explicit_sharding:
+        tp = current_tp()
+        if tp:
+            if cfg.n_heads % tp == 0:
+                # Megatron-style: q heads sharded; kv heads sharded when
+                # they divide, else replicated (GQA with few kv heads)
+                q = constrain(q, "dp", "tp", None, None)
+                kv_ax = "tp" if cfg.n_kv_heads % tp == 0 else None
+                k = constrain(k, "dp", kv_ax, None, None)
+                v = constrain(v, "dp", kv_ax, None, None)
+            else:
+                # context parallel: sequence sharded, KV gathered. One q
+                # chunk (no q-scan) so the score rows shard cleanly on S.
+                q = constrain(q, "dp", None, "tp", None)
+                k = constrain(k, "dp", None, None, None)
+                v = constrain(v, "dp", None, None, None)
+                chunk_q = S
+
+    o = flash_attn_jnp(q, k, v, causal=causal, window=window,
+                       prefix_len=prefix_len, chunk_q=chunk_q)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim_)
+    return o @ p["wo"]
+
+
+# ------------------------------------------------------------------ MLA ----
+def mla_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array) -> jax.Array:
+    """DeepSeek multi-head latent attention, training/prefill form."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    cq = rmsnorm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(B, S, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions[None, None, :], cfg.rope_theta)
+
+    c_kv = rmsnorm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)  # (B,S,r)
+    k_rope = rope((x @ p["w_kr"])[:, None, :, :], positions[None, None, :],
+                  cfg.rope_theta)                                # (B,1,S,dr)
+    kv = (c_kv @ p["w_ukv"]).reshape(B, S, H, dn + dv).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, H, S, dr))], axis=-1)
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = flash_attn_jnp(qh, k, v, causal=True, scale=(dn + dr) ** -0.5,
+                       chunk_q=cfg.attn_chunk_q)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * dv)
+    return o @ p["wo"]
+
+
+def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, *,
+               c_cache: jax.Array, kr_cache: jax.Array,
+               cache_len: jax.Array, position: jax.Array):
+    """Absorbed-matrix MLA decode: attention runs in the latent space, the
+    cache stores (kv_lora_rank + qk_rope_dim) per token (DESIGN §5).
+
+    x: (B, 1, D); c_cache: (B, T, r); kr_cache: (B, T, dr).
+    Returns (out (B,1,D), new_c (B,1,r), new_kr (B,1,dr))."""
+    B, _, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                     cfg.kv_lora_rank)
+
+    cq = rmsnorm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(B, 1, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, position[None, None, :], cfg.rope_theta)
+
+    w_ukv = p["w_ukv"].reshape(r, H, dn + dv)
+    w_uk = w_ukv[..., :dn]                    # (r, H, dn)
+    w_uv = w_ukv[..., dn:]                    # (r, H, dv)
+
+    # absorb W_uk into the query: q_lat = q_nope @ W_uk^T  -> (B,H,1,r)
+    q_lat = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_uk)
+
+    new_c = rmsnorm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)  # (B,1,r)
+    new_kr = rope((x @ p["w_kr"]), position[None, :], cfg.rope_theta)
+
+    c_cache = jax.lax.dynamic_update_slice(
+        c_cache, new_c.astype(c_cache.dtype), (0, cache_len - 1, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        kr_cache, new_kr.astype(kr_cache.dtype), (0, cache_len - 1, 0))
+
+    s = (jnp.einsum("bhqr,btr->bhqt", q_lat.astype(jnp.float32),
+                    c_cache.astype(jnp.float32))
+         + jnp.einsum("bhqd,btd->bhqt", q_rope.astype(jnp.float32),
+                      kr_cache.astype(jnp.float32))) * ((dn + dr) ** -0.5)
+    pos = jnp.arange(c_cache.shape[1])
+    s = jnp.where((pos < cache_len)[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqt,btr->bhqr", w, c_cache.astype(jnp.float32))
+    o = jnp.einsum("bhqr,rhd->bhqd", o_lat.astype(x.dtype), w_uv)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, H * dv)
+    return o @ p["wo"], c_cache, kr_cache

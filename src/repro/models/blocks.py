@@ -1,0 +1,101 @@
+"""Shared building blocks: norms, rope, activations, MLP, embedding."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamDef
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rmsnorm_def(dim: int, dtype) -> ParamDef:
+    # stored as offset from 1 (gemma convention); init zeros
+    return ParamDef((dim,), dtype, (None,), init="zeros")
+
+
+# ----------------------------------------------------------------- rope ----
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         rot_dim: Optional[int] = None) -> jax.Array:
+    """x: (..., S, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1] if rot_dim is None else rot_dim
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:d]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+    if rot_dim is not None and rot_dim < x.shape[-1]:
+        out = jnp.concatenate([out, x[..., d:]], axis=-1)
+    return out
+
+
+# ------------------------------------------------------------------ mlp ----
+def mlp_defs(cfg: ModelConfig, d_in: int, d_ff: int) -> dict:
+    dt = cfg.pdtype()
+    if cfg.act.endswith("_glu"):
+        return {
+            "w_gate": ParamDef((d_in, d_ff), dt, (None, "tp")),
+            "w_up": ParamDef((d_in, d_ff), dt, (None, "tp")),
+            "w_down": ParamDef((d_ff, d_in), dt, ("tp", None)),
+        }
+    return {
+        "w_up": ParamDef((d_in, d_ff), dt, (None, "tp")),
+        "w_down": ParamDef((d_ff, d_in), dt, ("tp", None)),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    if act.endswith("_glu"):
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        g = jax.nn.silu(g) if act.startswith("silu") else jax.nn.gelu(g)
+        return (g * u) @ p["w_down"]
+    h = x @ p["w_up"]
+    h = jax.nn.gelu(h)
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------ embedding ----
+def embed_defs(cfg: ModelConfig) -> dict:
+    dt = cfg.pdtype()
+    # ~N(0, 1/sqrt(d)) so the sqrt(d) lookup scaling yields unit-variance
+    # activations and tied logits stay O(1) at init
+    d = {"tok": ParamDef((cfg.padded_vocab, cfg.d_model), dt,
+                         ("tp", None), scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        d["out"] = ParamDef((cfg.d_model, cfg.padded_vocab), dt,
+                            (None, "tp"))
+    return d
+
+
+def embed_lookup(emb: jax.Array, tokens: jax.Array, d_model: int
+                 ) -> jax.Array:
+    # gather rows; with the table sharded on vocab, GSPMD turns this into
+    # a sharded gather + collective. Scaled by sqrt(d) (gemma convention
+    # is harmless for the others).
+    return emb[tokens] * jnp.asarray(d_model ** 0.5, emb.dtype)
+
+
+def logits_out(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"]          # (V, D)
+        out = jnp.einsum("...d,vd->...v", x, w)
+    else:
+        out = x @ params["embed"]["out"]
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        out = jnp.tanh(out / c) * c
+    return out

@@ -1,0 +1,259 @@
+"""Autoregressive decode: caches + single-token step for every family.
+
+serve_step contract (the dry-run lowers exactly this):
+    logits, cache = decode_step(params, cfg, token, cache)
+with `cache.length` counting tokens *including* the current one.
+
+Cache kinds:
+  attn        full KV cache (B, Hkv, T_max, dh), rope'd keys
+  local_attn  ring KV cache of size window + slot-position vector
+  mla         latent cache (B, T_max, r) + rope cache (B, T_max, dr)
+  ssd / rglru O(1) recurrent states
+  cross       precomputed encoder K/V (whisper), never updated
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .blocks import rmsnorm, embed_lookup, logits_out, rope
+from .attention import gqa_project, decode_attn, mla_decode, NEG_INF
+from .ssm import ssd_init_cache, ssd_step
+from .rglru import rglru_init_cache, rglru_step
+from .moe import moe_apply
+from .blocks import mlp_apply
+from .transformer import stack_plan, _sig
+from .sharding import constrain
+
+
+# ------------------------------------------------------------- factories ---
+def _attn_cache(cfg: ModelConfig, batch: int, t_max: int, kind: str):
+    dt = cfg.dtype()
+    if cfg.use_mla:
+        return {
+            "c": jnp.zeros((batch, t_max, cfg.kv_lora_rank), dt),
+            "kr": jnp.zeros((batch, t_max, cfg.qk_rope_dim), dt),
+        }
+    t = min(t_max, cfg.local_window) if kind == "local_attn" else t_max
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, t, cfg.head_dim_), dt),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, t, cfg.head_dim_), dt),
+        "slot_pos": jnp.full((t,), -1, jnp.int32),
+    }
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, t_max: int):
+    if kind in ("attn", "local_attn"):
+        return _attn_cache(cfg, batch, t_max, kind)
+    if kind == "ssd":
+        return ssd_init_cache(cfg, batch, cfg.dtype())._asdict()
+    if kind == "rglru":
+        return rglru_init_cache(cfg, batch, cfg.dtype())._asdict()
+    raise ValueError(kind)
+
+
+def _stack_tree(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_cache(cfg: ModelConfig, batch: int, t_max: int,
+               enc_out: Optional[jax.Array] = None,
+               params: Optional[dict] = None) -> dict:
+    """Build the decode cache pytree (mirrors the decoder param layout)."""
+    plan = stack_plan(cfg, cfg.n_layers, cfg.first_dense_layers)
+    kinds = cfg.layer_kinds()
+    cache: Dict[str, Any] = {"head": {}, "stack": {}, "tail": {},
+                             "length": jnp.zeros((), jnp.int32)}
+    for i in plan.head:
+        cache["head"][f"layer{i}"] = _layer_cache(cfg, kinds[i], batch, t_max)
+    base = len(plan.head)
+    for j in plan.pattern:
+        if plan.repeats:
+            per = [_layer_cache(cfg, kinds[base + j], batch, t_max)
+                   for _ in range(plan.repeats)]
+            cache["stack"][f"pos{j}"] = _stack_tree(per)
+    for i in plan.tail:
+        cache["tail"][f"layer{i}"] = _layer_cache(cfg, kinds[i], batch, t_max)
+
+    if cfg.is_encdec:
+        assert enc_out is not None and params is not None
+        cross = {}
+        plan_layers = (
+            [("head", f"layer{i}") for i in plan.head]
+            + [("stack", f"pos{j}") for j in plan.pattern]
+            + [("tail", f"layer{i}") for i in plan.tail])
+        B, Se, D = enc_out.shape
+        Hkv, dh = cfg.n_kv_heads, cfg.head_dim_
+
+        def kv_of(p):
+            k = (enc_out @ p["wk"]).reshape(B, Se, Hkv, dh)
+            v = (enc_out @ p["wv"]).reshape(B, Se, Hkv, dh)
+            return {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+
+        for grp, name in plan_layers:
+            pl = params["decoder"][grp][name]
+            if grp == "stack" and plan.repeats:
+                kv = jax.vmap(lambda c: kv_of(c))(pl["cross"])
+                cross.setdefault(grp, {})[name] = kv
+            else:
+                cross.setdefault(grp, {})[name] = kv_of(pl["cross"])
+        cache["cross"] = cross
+    return cache
+
+
+# ------------------------------------------------------------ layer step ---
+def _attn_step(pl: dict, h: jax.Array, cache_l: dict, cfg: ModelConfig,
+               kind: str, length: jax.Array):
+    """h: (B, 1, D) normed input. Returns (out, new cache)."""
+    B = h.shape[0]
+    pos = length - 1                                    # current position
+    if cfg.use_mla:
+        out, c, kr = mla_decode(pl["attn"], h, cfg, c_cache=cache_l["c"],
+                                kr_cache=cache_l["kr"], cache_len=length,
+                                position=pos[None])
+        return out, {"c": c, "kr": kr}
+
+    q, k, v = gqa_project(pl["attn"], h, cfg)           # (B,*,1,dh)
+    q = rope(q, pos[None, None, None], cfg.rope_theta)
+    k = rope(k, pos[None, None, None], cfg.rope_theta)
+    t_cache = cache_l["k"].shape[2]
+    slot = jnp.where(kind == "local_attn", pos % t_cache,
+                     jnp.minimum(pos, t_cache - 1)) if kind == "local_attn" \
+        else pos
+    slot = pos % t_cache if kind == "local_attn" else pos
+    kc = jax.lax.dynamic_update_slice(
+        cache_l["k"], k.astype(cache_l["k"].dtype), (0, 0, slot, 0))
+    vc = jax.lax.dynamic_update_slice(
+        cache_l["v"], v.astype(cache_l["v"].dtype), (0, 0, slot, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache_l["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+
+    # mask from absolute slot positions (handles the ring buffer)
+    dh = cfg.head_dim_
+    qg = q.reshape(B, cfg.n_kv_heads, -1, dh)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * (dh ** -0.5)
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if kind == "local_attn":
+        ok = ok & (slot_pos > pos - cfg.local_window)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p_att = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p_att, vc.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.n_heads * dh).astype(h.dtype)
+    out = o @ pl["attn"]["wo"]
+    return out, {"k": kc, "v": vc, "slot_pos": slot_pos}
+
+
+def _cross_step(p: dict, h: jax.Array, kv: dict, cfg: ModelConfig):
+    B = h.shape[0]
+    H, dh = cfg.n_heads, cfg.head_dim_
+    q = (h @ p["wq"]).reshape(B, 1, H, dh).transpose(0, 2, 1, 3)
+    o = decode_attn(q, kv["k"], kv["v"],
+                    cache_len=jnp.asarray(kv["k"].shape[2], jnp.int32))
+    o = o.reshape(B, 1, H * dh).astype(h.dtype)
+    return o @ p["wo"]
+
+
+def _layer_step(pl: dict, cache_l, x: jax.Array, cfg: ModelConfig,
+                kind: str, is_moe: bool, length: jax.Array,
+                cross_kv: Optional[dict] = None):
+    h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local_attn"):
+        h, cache_l = _attn_step(pl, h, cache_l, cfg, kind, length)
+    elif kind == "ssd":
+        from .ssm import SSDCache
+        h, new = ssd_step(pl["ssd"], h, SSDCache(**cache_l), cfg)
+        cache_l = new._asdict()
+    elif kind == "rglru":
+        from .rglru import LRUCache
+        h, new = rglru_step(pl["rglru"], h, LRUCache(**cache_l), cfg)
+        cache_l = new._asdict()
+    x = x + h
+    if cross_kv is not None and "cross" in pl:
+        h = rmsnorm(x, pl["norm_cross"], cfg.norm_eps)
+        x = x + _cross_step(pl["cross"], h, cross_kv, cfg)
+    if is_moe:
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        h, _ = moe_apply(pl["moe"], h, cfg)
+        x = x + h
+    elif cfg.d_ff > 0:
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(pl["mlp"], h, cfg.act)
+    return x, cache_l
+
+
+# -------------------------------------------------------------- the step ---
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
+                cache: dict) -> Tuple[jax.Array, dict]:
+    """token: (B,) int32. Returns (logits (B, V), new cache)."""
+    plan = stack_plan(cfg, cfg.n_layers, cfg.first_dense_layers)
+    kinds = cfg.layer_kinds()
+    length = cache["length"] + 1
+    pos = length - 1
+
+    x = embed_lookup(params["embed"]["tok"], token[:, None], cfg.d_model)
+    x = x.astype(cfg.dtype())
+    x = constrain(x, "dp", None, None)
+
+    new_cache: Dict[str, Any] = {"head": {}, "stack": {}, "tail": {},
+                                 "length": length}
+    if "cross" in cache:
+        new_cache["cross"] = cache["cross"]
+
+    def cross_of(grp, name, j=None):
+        if "cross" not in cache:
+            return None
+        kv = cache["cross"][grp][name]
+        return kv
+
+    for i in plan.head:
+        nm = f"layer{i}"
+        x, c = _layer_step(params["decoder"]["head"][nm], cache["head"][nm],
+                           x, cfg, kinds[i], False, length,
+                           cross_of("head", nm))
+        new_cache["head"][nm] = c
+
+    if plan.repeats:
+        base = len(plan.head)
+        # scan jointly over the stacked params and caches of each position
+        def body(x, per_layer):
+            pls, cls, crs = per_layer
+            for j in plan.pattern:
+                nm = f"pos{j}"
+                kind, m = _sig(cfg, base + j)
+                x, cnew = _layer_step(pls[nm], cls[nm], x, cfg, kind, m,
+                                      length,
+                                      crs[nm] if crs is not None else None)
+                cls = {**cls, nm: cnew}
+            return x, cls
+
+        pls = {f"pos{j}": params["decoder"]["stack"][f"pos{j}"]
+               for j in plan.pattern}
+        cls = {f"pos{j}": cache["stack"][f"pos{j}"] for j in plan.pattern}
+        crs = (None if "cross" not in cache else
+               {f"pos{j}": cache["cross"]["stack"][f"pos{j}"]
+                for j in plan.pattern})
+        xs = (pls, cls, crs) if crs is not None else (pls, cls, None)
+        if crs is None:
+            x, new_stack = jax.lax.scan(
+                lambda x_, pc: body(x_, (pc[0], pc[1], None)), x, (pls, cls))
+        else:
+            x, new_stack = jax.lax.scan(body, x, (pls, cls, crs))
+        new_cache["stack"] = new_stack
+
+    for i in plan.tail:
+        nm = f"layer{i}"
+        x, c = _layer_step(params["decoder"]["tail"][nm], cache["tail"][nm],
+                           x, cfg, kinds[i], _sig(cfg, i)[1], length,
+                           cross_of("tail", nm))
+        new_cache["tail"][nm] = c
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_out(params, x, cfg)[:, 0]
+    logits = constrain(logits, "dp", "tp")
+    return logits, new_cache

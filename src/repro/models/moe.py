@@ -1,0 +1,97 @@
+"""Mixture-of-Experts: GShard-style grouped dispatch/combine einsums.
+
+Tokens are reshaped into (G groups, tg tokens) so the dispatch tensors stay
+bounded; groups shard over the DP axis, experts over the model axis (EP).
+XLA inserts the all-to-alls at the group<->expert einsum boundaries.
+
+Routing: softmax over experts, top-k, renormalized (Qwen2-MoE style; the
+DeepSeek-V3 sigmoid+bias-update router is approximated by the same softmax
+top-k — deviation noted in DESIGN.md). Capacity-factor token dropping
+matches GShard; an auxiliary load-balance loss is returned.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamDef
+from .config import ModelConfig
+from .blocks import mlp_defs, mlp_apply
+from .sharding import constrain
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    dt = cfg.pdtype()
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    d = {
+        "router": ParamDef((D, E), jnp.float32, (None, None), scale=0.02),
+        "w_gate": ParamDef((E, D, F), dt, ("tp", None, None)),
+        "w_up": ParamDef((E, D, F), dt, ("tp", None, None)),
+        "w_down": ParamDef((E, F, D), dt, ("tp", None, None)),
+    }
+    if cfg.n_shared_experts:
+        d["shared"] = mlp_defs(cfg, D, cfg.n_shared_experts * F)
+    return d
+
+
+def capacity(cfg: ModelConfig) -> int:
+    tg = cfg.moe_group_size
+    c = int(tg * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    tg = min(cfg.moe_group_size, B * S)
+    G = (B * S) // tg
+    C = capacity(cfg)
+    xg = x.reshape(G, tg, D)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])          # (G, t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                 # (G, t, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # expert one-hot per assignment slot: (G, t, K, E)
+    mask = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+    # position of each assignment within its expert, in (t, k) raster order
+    flat = mask.reshape(G, tg * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, tg, K, E)
+    fits = pos < C
+    mask = mask * fits
+
+    # aux load-balance loss (Switch): E * sum_e f_e * P_e
+    frac_tokens = mask.sum(axis=(1, 2)) / tg                 # (G, E)
+    frac_probs = probs.mean(axis=1)                          # (G, E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    slot = jax.nn.one_hot(jnp.sum(pos * mask, axis=-1).astype(jnp.int32),
+                          C, dtype=jnp.float32)              # (G, t, K, C)
+    present = mask.max(axis=-1, keepdims=True)               # (G, t, K, 1)
+    # dispatch/combine: (G, t, E, C) — groups shard over dp, experts over
+    # tp so the O(G*t*E*C) routing tensors cost 1/(|dp|*|tp|) per device
+    dispatch = jnp.einsum("gtke,gtkc->gtec", mask, slot * present)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", mask, slot * present,
+                         gate_vals)
+    dispatch = constrain(dispatch, "dp", None, "tp", None)
+    combine = constrain(combine, "dp", None, "tp", None)
+
+    dt = x.dtype
+    ei = jnp.einsum("gtec,gtd->egcd", dispatch.astype(dt), xg)  # EP boundary
+    ei = constrain(ei, "tp", "dp", None, None)
+    h_g = jnp.einsum("egcd,edf->egcf", ei, p["w_gate"])
+    h_u = jnp.einsum("egcd,edf->egcf", ei, p["w_up"])
+    act = jax.nn.silu(h_g) if cfg.act.startswith("silu") else jax.nn.gelu(h_g)
+    eo = jnp.einsum("egcf,efd->egcd", act * h_u, p["w_down"])
+    eo = constrain(eo, "tp", "dp", None, None)
+    out = jnp.einsum("gtec,egcd->gtd", combine.astype(dt), eo)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(p["shared"], xg, cfg.act)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,108 @@
+"""Parameter specification DSL — one source of truth for init, abstract
+(dry-run) params, and sharding.
+
+Every parameter leaf is declared once as a ParamDef (shape, dtype, logical
+partition spec, init scale). From the same tree of ParamDefs we derive:
+  * init_params   — materialized random params (smoke tests, real training)
+  * abstract      — jax.ShapeDtypeStruct stand-ins (dry-run: no allocation)
+  * pspecs        — PartitionSpec tree (pjit in_shardings)
+
+Logical axis names used in specs:
+  "tp"   -> the tensor/model axis of the mesh ("model")
+  "dp"   -> the data axis; params themselves never use it (ZeRO-1 optimizer
+            state resharding happens in training/optimizer.py)
+  None   -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_TO_PHYSICAL = {
+    "tp": "model",
+    "dp": "data",          # ("pod", "data") when multi_pod — see resolve()
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    spec: Tuple[Optional[str], ...] = ()   # logical names, len == ndim
+    init: str = "normal"                   # normal | zeros | ones
+    scale: Optional[float] = None          # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if self.spec and len(self.spec) != len(self.shape):
+            raise ValueError(f"spec {self.spec} vs shape {self.shape}")
+
+
+def resolve_axis(name: Optional[str], multi_pod: bool):
+    if name is None:
+        return None
+    if name == "dp":
+        return ("pod", "data") if multi_pod else "data"
+    return LOGICAL_TO_PHYSICAL.get(name, name)
+
+
+def resolve_pspec(spec: Sequence[Optional[str]], multi_pod: bool) -> P:
+    return P(*[resolve_axis(s, multi_pod) for s in spec])
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=_is_def)
+
+
+def abstract_params(defs):
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def pspec_tree(defs, multi_pod: bool = False, fsdp_dp: int = 0):
+    """fsdp_dp > 0: additionally shard each param's largest free
+    dp-divisible axis over the DP axis (ZeRO-3 / FSDP). Required for
+    params that exceed HBM under TP-only sharding (deepseek-v3-671b)."""
+    def one(d: ParamDef):
+        spec = list(d.spec or (None,) * len(d.shape))
+        if fsdp_dp:
+            best, best_dim = -1, 0
+            for ax, (dim, s) in enumerate(zip(d.shape, spec)):
+                if s is None and dim % fsdp_dp == 0 and dim > best_dim:
+                    best, best_dim = ax, dim
+            if best >= 0:
+                spec[best] = "dp"
+        return resolve_pspec(spec, multi_pod)
+    return tree_map_defs(one, defs)
+
+
+def init_params(defs, key: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            scale = d.scale if d.scale is not None else fan_in ** -0.5
+            out.append(
+                (jax.random.normal(k, d.shape, jnp.float32) * scale
+                 ).astype(d.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree_map_defs(lambda d: int(np.prod(d.shape)), defs))
+    return int(sum(leaves))

@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Temporal-mixing block: two width-W branches; the recurrent branch runs a
+causal conv then the Real-Gated LRU; the gate branch is GeLU; merged by
+elementwise product and projected out. The recurrence is a first-order
+linear scan -> jax.lax.associative_scan (log-depth, TPU-friendly).
+Features shard over the model axis (2560 / 16 = 160 lanes per shard).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamDef
+from .config import ModelConfig
+
+_C = 8.0  # Griffin's fixed gate exponent
+
+
+class LRUCache(NamedTuple):
+    h: jax.Array          # (B, W)
+    conv: jax.Array       # (B, k-1, W)
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    dt = cfg.pdtype()
+    D, W = cfg.d_model, cfg.lru_width_
+    k = cfg.ssm_conv
+    return {
+        "w_in": ParamDef((D, W), dt, (None, "tp")),
+        "w_gate_branch": ParamDef((D, W), dt, (None, "tp")),
+        "conv": ParamDef((k, W), dt, (None, "tp"), scale=0.5),
+        "w_a": ParamDef((W, W), dt, (None, "tp"), scale=0.02),
+        "b_a": ParamDef((W,), jnp.float32, ("tp",), init="zeros"),
+        "w_i": ParamDef((W, W), dt, (None, "tp"), scale=0.02),
+        "b_i": ParamDef((W,), jnp.float32, ("tp",), init="zeros"),
+        "lam": ParamDef((W,), jnp.float32, ("tp",), init="ones"),
+        "w_out": ParamDef((W, D), dt, ("tp", None)),
+    }
+
+
+def _lru_coeffs(p: dict, u: jax.Array):
+    """u: (B, S, W) conv output. Returns (a, b) of h_t = a_t h + b_t."""
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a0 = jax.nn.log_sigmoid(p["lam"])          # log a in (-inf, 0)
+    log_a = _C * r * log_a0                        # (B, S, W)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def rglru_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill. x: (B, S, D) -> (B, S, D)."""
+    u = _causal_conv(x @ p["w_in"], p["conv"])
+    a, b = _lru_coeffs(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32))
+    y = (h * gate).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int, dtype) -> LRUCache:
+    W, k = cfg.lru_width_, cfg.ssm_conv
+    return LRUCache(h=jnp.zeros((batch, W), jnp.float32),
+                    conv=jnp.zeros((batch, k - 1, W), dtype))
+
+
+def rglru_step(p: dict, x: jax.Array, cache: LRUCache, cfg: ModelConfig
+               ) -> Tuple[jax.Array, LRUCache]:
+    """O(1) decode. x: (B, 1, D)."""
+    xt = x[:, 0]
+    u_raw = xt @ p["w_in"]
+    win = jnp.concatenate([cache.conv, u_raw[:, None]], axis=1)
+    u = jnp.einsum("bkc,kc->bc", win, p["conv"])
+    a, b = _lru_coeffs(p, u[:, None, :])
+    a, b = a[:, 0], b[:, 0]
+    h = a * cache.h + b
+    gate = jax.nn.gelu((xt @ p["w_gate_branch"]).astype(jnp.float32))
+    y = (h * gate).astype(x.dtype)
+    return (y @ p["w_out"])[:, None, :], LRUCache(h=h, conv=win[:, 1:])

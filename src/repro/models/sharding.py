@@ -1,0 +1,52 @@
+"""Activation-sharding helpers.
+
+Model code annotates activations with *logical* axes; the launcher activates
+resolution (single- vs multi-pod). Outside an active context (unit tests on
+one device) the constraints are no-ops, so the same model code runs
+everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .param import resolve_pspec
+
+_state = threading.local()
+
+
+def _active() -> Optional[bool]:
+    return getattr(_state, "multi_pod", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(multi_pod: bool, tp: int = 16):
+    prev = _active()
+    prev_tp = getattr(_state, "tp", None)
+    _state.multi_pod = multi_pod
+    _state.tp = tp
+    try:
+        yield
+    finally:
+        _state.multi_pod = prev
+        _state.tp = prev_tp
+
+
+def current_tp() -> Optional[int]:
+    """Model-axis size, or None outside an activation_sharding context."""
+    if _active() is None:
+        return None
+    return getattr(_state, "tp", None)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """constrain(x, 'dp', 'tp', None) — logical axes per dim."""
+    mp = _active()
+    if mp is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, resolve_pspec(logical, multi_pod=mp))

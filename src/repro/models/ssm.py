@@ -1,0 +1,183 @@
+"""Mamba-2 SSD (state-space duality) block — chunked training form and O(1)
+recurrent decode form.
+
+Within a chunk of length Q the token mixing is the quadratic 'attention-like'
+masked form; across chunks a (H, P, N) state is carried by a scan. Heads
+shard over the model axis (80 heads / 16 = 5 for mamba2-2.7b); B/C are
+group-shared (n_groups=1) and replicated.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamDef
+from .config import ModelConfig
+from .blocks import rmsnorm
+
+
+class SSDCache(NamedTuple):
+    h: jax.Array          # (B, H, P, N) inter-chunk state
+    conv_x: jax.Array     # (B, k-1, d_inner)
+    conv_b: jax.Array     # (B, k-1, N)
+    conv_c: jax.Array     # (B, k-1, N)
+
+
+def ssd_defs(cfg: ModelConfig) -> dict:
+    dt = cfg.pdtype()
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.ssm_conv
+    return {
+        "w_z": ParamDef((D, DI), dt, (None, "tp")),
+        "w_x": ParamDef((D, DI), dt, (None, "tp")),
+        "w_b": ParamDef((D, N), dt, (None, None)),
+        "w_c": ParamDef((D, N), dt, (None, None)),
+        "w_dt": ParamDef((D, H), dt, (None, "tp")),
+        "dt_bias": ParamDef((H,), jnp.float32, ("tp",), init="zeros"),
+        "a_log": ParamDef((H,), jnp.float32, ("tp",), init="zeros"),
+        "d_skip": ParamDef((H,), jnp.float32, ("tp",), init="ones"),
+        "conv_x": ParamDef((k, DI), dt, (None, "tp"), scale=0.5),
+        "conv_b": ParamDef((k, N), dt, (None, None), scale=0.5),
+        "conv_c": ParamDef((k, N), dt, (None, None), scale=0.5),
+        "norm": ParamDef((DI,), dt, ("tp",), init="zeros"),
+        "w_out": ParamDef((DI, D), dt, ("tp", None)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, S, C), w (k, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _ssd_scan(xh, bh, ch, dt_h, a_log, chunk: int):
+    """Chunked SSD. xh: (B,S,H,P); bh/ch: (B,S,N); dt_h: (B,S,H) (post-
+    softplus); a_log: (H,) (A = -exp(a_log)). Returns (B,S,H,P)."""
+    B, S, H, P = xh.shape
+    N = bh.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0)))
+        dt_h = jnp.pad(dt_h, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    A = -jnp.exp(a_log.astype(jnp.float32))                   # (H,)
+
+    xq = xh.reshape(B, nc, Q, H, P)
+    bq = bh.reshape(B, nc, Q, N).astype(jnp.float32)
+    cq = ch.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtq = dt_h.reshape(B, nc, Q, H).astype(jnp.float32)
+
+    lq = dtq * A                                              # log-decays
+    cum = jnp.cumsum(lq, axis=2)                              # (B,nc,Q,H)
+
+    def chunk_step(h, inp):
+        xc, bc, cc, dtc, lc, cumc = inp
+        # intra-chunk: scores[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s
+        seg = cumc[:, :, None, :] - cumc[:, None, :, :]       # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)               # (B,Q,Q)
+        w = cb[..., None] * decay * dtc[:, None, :, :]        # (B,Q,Q,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp",
+                             w, xc.astype(jnp.float32))
+        # inter-chunk: y_t += C_t . h_in * exp(cum_t)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp",
+                             cc, h, jnp.exp(cumc))
+        # state update: h_out = h_in*exp(cum_Q) + sum_s exp(cum_Q-cum_s)*dt_s x_s B_s
+        tail = jnp.exp(cumc[:, -1:, :] - cumc) * dtc          # (B,Q,H)
+        dh = jnp.einsum("bsh,bshp,bsn->bhpn",
+                        tail, xc.astype(jnp.float32), bc)
+        h_new = h * jnp.exp(cumc[:, -1, :])[:, :, None, None] + dh
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    inputs = (xq.transpose(1, 0, 2, 3, 4), bq.transpose(1, 0, 2, 3),
+              cq.transpose(1, 0, 2, 3), dtq.transpose(1, 0, 2, 3),
+              lq.transpose(1, 0, 2, 3), cum.transpose(1, 0, 2, 3))
+    h_last, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y[:, :S_orig].astype(xh.dtype), h_last
+
+
+def ssd_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill form. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+
+    z = x @ p["w_z"]
+    xi = _causal_conv(x @ p["w_x"], p["conv_x"])
+    xi = jax.nn.silu(xi)
+    b = jax.nn.silu(_causal_conv(x @ p["w_b"], p["conv_b"]))
+    c = jax.nn.silu(_causal_conv(x @ p["w_c"], p["conv_c"]))
+    dt_h = jax.nn.softplus(
+        (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+
+    xh = xi.reshape(B, S, H, P)
+    y, _ = _ssd_scan(xh, b, c, dt_h, p["a_log"], cfg.ssm_chunk)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, H * P)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def ssd_init_cache(cfg: ModelConfig, batch: int, dtype) -> SSDCache:
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    k = cfg.ssm_conv
+    return SSDCache(
+        h=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv_x=jnp.zeros((batch, k - 1, cfg.d_inner), dtype),
+        conv_b=jnp.zeros((batch, k - 1, N), dtype),
+        conv_c=jnp.zeros((batch, k - 1, N), dtype),
+    )
+
+
+def ssd_step(p: dict, x: jax.Array, cache: SSDCache, cfg: ModelConfig
+             ) -> Tuple[jax.Array, SSDCache]:
+    """O(1) decode. x: (B, 1, D)."""
+    B, _, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xt = x[:, 0]
+
+    z = xt @ p["w_z"]
+
+    def conv_step(prev, new, w):
+        # prev: (B, k-1, C); new: (B, C); w: (k, C)
+        win = jnp.concatenate([prev, new[:, None]], axis=1)   # (B, k, C)
+        out = jnp.einsum("bkc,kc->bc", win, w)
+        return out, win[:, 1:]
+
+    xi_raw = xt @ p["w_x"]
+    xi, cx = conv_step(cache.conv_x, xi_raw, p["conv_x"])
+    xi = jax.nn.silu(xi)
+    b_raw = xt @ p["w_b"]
+    b, cb = conv_step(cache.conv_b, b_raw, p["conv_b"])
+    b = jax.nn.silu(b)
+    c_raw = xt @ p["w_c"]
+    c, cc = conv_step(cache.conv_c, c_raw, p["conv_c"])
+    c = jax.nn.silu(c)
+    dt_h = jax.nn.softplus(
+        (xt @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])  # (B, H)
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_h * A)                                 # (B, H)
+    xh = xi.reshape(B, H, P).astype(jnp.float32)
+    h = (cache.h * decay[:, :, None, None]
+         + jnp.einsum("bh,bhp,bn->bhpn", dt_h, xh,
+                      b.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), h)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, H * P).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None, :]
+    return out, SSDCache(h=h, conv_x=cx, conv_b=cb, conv_c=cc)

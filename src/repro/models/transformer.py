@@ -1,0 +1,280 @@
+"""Unified transformer assembly for the 10 assigned architectures:
+decoder-only (dense/MoE/MLA), SSM, hybrid (RG-LRU + local attention),
+encoder-decoder (whisper), and prefix-LM VLM (paligemma).
+
+Layers with identical signatures are stacked and scanned (small HLO, fast
+512-device compiles); `first_dense_layers` (DeepSeek) and pattern
+remainders fall out of the scan as explicitly-unrolled layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamDef, tree_map_defs
+from .config import ModelConfig
+from .blocks import (rmsnorm, rmsnorm_def, mlp_defs, mlp_apply, embed_defs,
+                     embed_lookup, logits_out, rope)
+from .attention import (attn_defs, mla_defs, gqa_attention, mla_attention,
+                        gqa_project, decode_attn, mla_decode)
+from .moe import moe_defs, moe_apply
+from .ssm import (ssd_defs, ssd_apply, ssd_step, ssd_init_cache, SSDCache)
+from .rglru import (rglru_defs, rglru_apply, rglru_step, rglru_init_cache,
+                    LRUCache)
+from .sharding import constrain
+
+
+# ===================================================================== defs
+def _sig(cfg: ModelConfig, idx: int) -> Tuple[str, bool]:
+    return (cfg.layer_kinds()[idx], cfg.moe_layer(idx))
+
+
+def layer_defs(cfg: ModelConfig, kind: str, is_moe: bool,
+               cross: bool = False) -> dict:
+    dt = cfg.pdtype()
+    d: Dict[str, Any] = {"norm1": rmsnorm_def(cfg.d_model, dt)}
+    if kind in ("attn", "local_attn"):
+        d["attn"] = mla_defs(cfg) if cfg.use_mla else attn_defs(cfg)
+    elif kind == "rglru":
+        d["rglru"] = rglru_defs(cfg)
+    elif kind == "ssd":
+        d["ssd"] = ssd_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        d["norm_cross"] = rmsnorm_def(cfg.d_model, dt)
+        d["cross"] = attn_defs(cfg)
+    if is_moe:
+        d["norm2"] = rmsnorm_def(cfg.d_model, dt)
+        d["moe"] = moe_defs(cfg)
+    elif cfg.d_ff > 0:
+        d["norm2"] = rmsnorm_def(cfg.d_model, dt)
+        d["mlp"] = mlp_defs(cfg, cfg.d_model, cfg.d_ff)
+    return d
+
+
+def _stack_defs(defs, r: int):
+    return tree_map_defs(
+        lambda p: dataclasses.replace(
+            p, shape=(r,) + p.shape,
+            spec=(None,) + tuple(p.spec or (None,) * len(p.shape))),
+        defs)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    """How n_layers maps onto scanned/unrolled groups."""
+    head: Tuple[int, ...]          # unrolled layer indices (prefix)
+    repeats: int                   # scan length
+    pattern: Tuple[int, ...]       # layer idx offsets inside one scan step
+    tail: Tuple[int, ...]          # unrolled layer indices (suffix)
+
+
+def stack_plan(cfg: ModelConfig, n_layers: int, first_dense: int) -> StackPlan:
+    pat = len(cfg.block_pattern)
+    head = tuple(range(first_dense))
+    rest = n_layers - first_dense
+    r = rest // pat if cfg.scan_layers else 0
+    tail_start = first_dense + r * pat
+    return StackPlan(
+        head=head, repeats=r, pattern=tuple(range(pat)),
+        tail=tuple(range(tail_start, n_layers)))
+
+
+def _decoder_defs(cfg: ModelConfig, n_layers: int, cross: bool) -> dict:
+    plan = stack_plan(cfg, n_layers, cfg.first_dense_layers)
+    out: Dict[str, Any] = {"head": {}, "stack": {}, "tail": {}}
+    for i in plan.head:
+        k, _ = _sig(cfg, i)
+        out["head"][f"layer{i}"] = layer_defs(cfg, k, False, cross)
+    if plan.repeats:
+        base = len(plan.head)
+        for j in plan.pattern:
+            k, m = _sig(cfg, base + j)
+            out["stack"][f"pos{j}"] = _stack_defs(
+                layer_defs(cfg, k, m, cross), plan.repeats)
+    for i in plan.tail:
+        k, m = _sig(cfg, i)
+        out["tail"][f"layer{i}"] = layer_defs(cfg, k, m, cross)
+    return out
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    dt = cfg.pdtype()
+    d: Dict[str, Any] = {
+        "embed": embed_defs(cfg),
+        "decoder": _decoder_defs(cfg, cfg.n_layers, cross=cfg.is_encdec),
+        "final_norm": rmsnorm_def(cfg.d_model, dt),
+    }
+    if cfg.is_encdec:
+        enc_cfg = dataclasses.replace(
+            cfg, block_pattern=("attn",), n_experts=0, first_dense_layers=0)
+        d["encoder"] = _decoder_defs(enc_cfg, cfg.n_enc_layers, cross=False)
+        d["enc_norm"] = rmsnorm_def(cfg.d_model, dt)
+    return d
+
+
+# ================================================================== forward
+def _mix(pl: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
+         positions, causal, prefix_len, enc_out) -> jax.Array:
+    h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else None
+        if cfg.use_mla:
+            h = mla_attention(pl["attn"], h, cfg, positions=positions)
+        else:
+            h = gqa_attention(pl["attn"], h, cfg, positions=positions,
+                              causal=causal, window=window,
+                              prefix_len=prefix_len)
+    elif kind == "rglru":
+        h = rglru_apply(pl["rglru"], h, cfg)
+    elif kind == "ssd":
+        h = ssd_apply(pl["ssd"], h, cfg)
+    x = x + h
+    if enc_out is not None and "cross" in pl:
+        h = rmsnorm(x, pl["norm_cross"], cfg.norm_eps)
+        h = _cross_attention(pl["cross"], h, enc_out, cfg)
+        x = x + h
+    return x
+
+
+def _cross_attention(p: dict, x: jax.Array, enc_out: jax.Array,
+                     cfg: ModelConfig) -> jax.Array:
+    from .attention import flash_attn_jnp
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = (enc_out @ p["wk"]).reshape(B, -1, Hkv, dh).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"]).reshape(B, -1, Hkv, dh).transpose(0, 2, 1, 3)
+    o = flash_attn_jnp(q, k, v, causal=False, chunk_q=cfg.attn_chunk_q)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * dh)
+    return o @ p["wo"]
+
+
+def _constrain_params_for_use(pl: dict, cfg: ModelConfig, kind: str,
+                              is_moe: bool) -> dict:
+    """FSDP: annotate the layer's params with their TP 'use' sharding.
+
+    Forward: forces the dp all-gather to happen per layer inside the scan
+    (not hoisted). Backward: with_sharding_constraint transposes to itself,
+    so the per-layer gradient cotangents are reduce-scattered back to the
+    FSDP layout INSIDE the loop — without this, the scan accumulates
+    dp-replicated grads for every layer (~80 GB/device at 671B)."""
+    defs = layer_defs(cfg, kind, is_moe, cross="cross" in pl)
+
+    def one(p, d):
+        spec = d.spec or (None,) * len(d.shape)
+        return constrain(p, *spec)
+
+    return jax.tree_util.tree_map(
+        one, pl, defs, is_leaf=lambda n: isinstance(n, ParamDef))
+
+
+def _apply_layer(pl: dict, x: jax.Array, cfg: ModelConfig, kind: str,
+                 is_moe: bool, *, positions, causal=True, prefix_len=0,
+                 enc_out=None) -> Tuple[jax.Array, jax.Array]:
+    # layer-boundary activations shard (dp, None, tp): the scan-over-layers
+    # carry (the remat-saved residual stream) costs 1/|tp| per device.
+    # d_model divides 16 for every assigned arch; seq stays whole so the
+    # SSD/RG-LRU time scans stay local.
+    if cfg.fsdp:
+        pl = _constrain_params_for_use(pl, cfg, kind, is_moe)
+    x = constrain(x, "dp", None, "tp")
+    x = _mix(pl, x, cfg, kind, positions=positions, causal=causal,
+             prefix_len=prefix_len, enc_out=enc_out)
+    aux = jnp.zeros((), jnp.float32)
+    if is_moe:
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        h, aux = moe_apply(pl["moe"], h, cfg)
+        x = x + h
+    elif cfg.d_ff > 0:
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(pl["mlp"], h, cfg.act)
+    return x, aux
+
+
+def _run_stack(params: dict, x: jax.Array, cfg: ModelConfig,
+               n_layers: int, first_dense: int, *, positions, causal=True,
+               prefix_len=0, enc_out=None) -> Tuple[jax.Array, jax.Array]:
+    plan = stack_plan(cfg, n_layers, first_dense)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def one(pl, x, idx_sig):
+        k, m = idx_sig
+        f = functools.partial(
+            _apply_layer, cfg=cfg, kind=k, is_moe=m, positions=positions,
+            causal=causal, prefix_len=prefix_len, enc_out=enc_out)
+        if cfg.remat:
+            return jax.checkpoint(lambda p_, x_: f(p_, x=x_))(pl, x)
+        return f(pl, x=x)
+
+    for i in plan.head:
+        x, a = one(params["head"][f"layer{i}"], x, (_sig(cfg, i)[0], False))
+        aux_total += a
+
+    if plan.repeats:
+        base = len(plan.head)
+        sigs = [_sig(cfg, base + j) for j in plan.pattern]
+        stack_params = [params["stack"][f"pos{j}"] for j in plan.pattern]
+
+        def body(carry, layer_params):
+            x, aux = carry
+            for j, pl in enumerate(layer_params):
+                x, a = one(pl, x, sigs[j])
+                aux = aux + a
+            return (x, aux), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), tuple(stack_params))
+
+    for i in plan.tail:
+        x, a = one(params["tail"][f"layer{i}"], x, _sig(cfg, i))
+        aux_total += a
+    return x, aux_total
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            enc_inputs: Optional[jax.Array] = None,
+            prefix_embeds: Optional[jax.Array] = None,
+            return_hidden: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Training/prefill forward.
+
+    tokens: (B, S) int32.
+    enc_inputs: (B, S_enc, D) precomputed frame embeddings (whisper stub).
+    prefix_embeds: (B, P, D) precomputed patch embeddings (paligemma stub).
+    Returns (logits (B, S_total, V), aux_loss)."""
+    x = embed_lookup(params["embed"]["tok"], tokens, cfg.d_model)
+    x = x.astype(cfg.dtype())
+    prefix_len = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype()), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    x = constrain(x, "dp", None, "tp")
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    enc_out = None
+    if cfg.is_encdec:
+        assert enc_inputs is not None
+        e = constrain(enc_inputs.astype(cfg.dtype()), "dp", None, None)
+        e_pos = jnp.arange(e.shape[1])
+        e, _ = _run_stack(params["encoder"], e, cfg, cfg.n_enc_layers, 0,
+                          positions=e_pos, causal=False)
+        enc_out = rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+
+    x, aux = _run_stack(params["decoder"], x, cfg, cfg.n_layers,
+                        cfg.first_dense_layers, positions=positions,
+                        prefix_len=prefix_len, enc_out=enc_out)
+    if return_hidden:
+        # PRE-final-norm: the chunked-CE path applies final_norm per chunk
+        # (a full-sequence f32 rmsnorm buffer costs GBs at 4k x 7k)
+        return x, aux
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_out(params, x, cfg)
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, aux

@@ -1,0 +1,75 @@
+"""Batched serving engine: prefill (token-by-token through the cache —
+exactly consistent with decode by construction) + sampled generation."""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.decode import init_cache, decode_step
+from ..models.transformer import _run_stack
+from ..models.blocks import rmsnorm
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 enc_inputs: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.enc_out = None
+        if cfg.is_encdec:
+            if enc_inputs is None:
+                enc_inputs = jnp.zeros((1, 16, cfg.d_model), cfg.dtype())
+            e, _ = _run_stack(params["encoder"],
+                              enc_inputs.astype(cfg.dtype()), cfg,
+                              cfg.n_enc_layers, 0,
+                              positions=jnp.arange(enc_inputs.shape[1]),
+                              causal=False)
+            self.enc_out = rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+        self._step = jax.jit(
+            lambda p, t, c: decode_step(p, self.cfg, t, c))
+
+    def new_cache(self, batch: int):
+        enc = self.enc_out
+        if enc is not None and enc.shape[0] != batch:
+            enc = jnp.broadcast_to(enc, (batch,) + enc.shape[1:])
+        return init_cache(self.cfg, batch, self.max_len,
+                          enc_out=enc, params=self.params)
+
+    def prefill(self, tokens: jax.Array, cache=None):
+        """tokens: (B, S). Feeds the prompt through the decode path."""
+        B, S = tokens.shape
+        cache = cache or self.new_cache(B)
+        logits = None
+        for t in range(S):
+            logits, cache = self._step(self.params, tokens[:, t], cache)
+        return logits, cache
+
+    def generate(self, prompts: jax.Array, n_tokens: int,
+                 temperature: float = 1.0, seed: int = 0) -> jax.Array:
+        B, S = prompts.shape
+        logits, cache = self.prefill(prompts)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits, key, temperature)
+        out.append(tok)
+        for i in range(n_tokens - 1):
+            key = jax.random.fold_in(key, i)
+            logits, cache = self._step(self.params, tok, cache)
+            tok = self._sample(logits, key, temperature)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    def _sample(self, logits: jax.Array, key, temperature: float):
+        # mask padded vocab tail
+        v = self.cfg.vocab_size
+        neg = jnp.full_like(logits, -1e30)
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < v, logits, neg)
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)

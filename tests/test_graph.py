@@ -1,0 +1,78 @@
+import numpy as np
+import pytest
+
+from repro.graph.generate import (powerlaw_webgraph, cycle_graph,
+                                  stanford_web_replica, STANFORD_N,
+                                  STANFORD_NNZ, STANFORD_DANGLING)
+from repro.graph.csr import CSRGraph, TransitionT
+from repro.graph.google import GoogleOperator, exact_pagerank
+
+
+def test_generator_statistics(small_graph):
+    assert small_graph.n == 2000
+    assert abs(small_graph.nnz - 16000) <= 16000 * 0.02
+    assert small_graph.dangling_mask.sum() == 10
+
+
+def test_generator_deterministic():
+    g1 = powerlaw_webgraph(n=500, target_nnz=3000, n_dangling=4, seed=3)
+    g2 = powerlaw_webgraph(n=500, target_nnz=3000, n_dangling=4, seed=3)
+    assert np.array_equal(g1.indices, g2.indices)
+    assert np.array_equal(g1.indptr, g2.indptr)
+
+
+def test_transition_is_stochastic(small_graph):
+    pt = TransitionT.from_graph(small_graph)
+    col_sums = np.zeros(small_graph.n)
+    np.add.at(col_sums, pt.src, pt.weight)
+    linked = ~small_graph.dangling_mask
+    np.testing.assert_allclose(col_sums[linked], 1.0, atol=1e-12)
+    np.testing.assert_allclose(col_sums[~linked], 0.0, atol=1e-12)
+
+
+def test_transition_matches_scipy(small_graph):
+    pt = TransitionT.from_graph(small_graph)
+    A = small_graph.to_scipy().astype(np.float64)
+    deg = np.asarray(A.sum(axis=1)).ravel()
+    inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
+    P = (A.multiply(inv[:, None])).tocsr()
+    diff = (pt.to_scipy() - P.T).tocoo()
+    assert np.abs(diff.data).max() < 1e-12 if diff.nnz else True
+
+
+def test_pagerank_vs_networkx(small_graph):
+    nx = pytest.importorskip("networkx")
+    pt = TransitionT.from_graph(small_graph)
+    op = GoogleOperator(pt=pt, alpha=0.85)
+    x = exact_pagerank(op, tol=1e-13)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(small_graph.n))
+    for i in range(small_graph.n):
+        for j in small_graph.indices[
+                small_graph.indptr[i]:small_graph.indptr[i + 1]]:
+            G.add_edge(i, int(j))
+    pr = nx.pagerank(G, alpha=0.85, tol=1e-12, max_iter=1000)
+    xr = np.array([pr[i] for i in range(small_graph.n)])
+    assert np.abs(x - xr).max() < 1e-9
+
+
+def test_cycle_uniform():
+    c = cycle_graph(64)
+    op = GoogleOperator(pt=TransitionT.from_graph(c))
+    x = exact_pagerank(op)
+    np.testing.assert_allclose(x, 1.0 / 64, atol=1e-12)
+
+
+def test_mass_conservation(small_op):
+    x = np.random.default_rng(0).random(small_op.n)
+    x /= x.sum()
+    y = small_op.apply_numpy(x)
+    assert abs(y.sum() - 1.0) < 1e-12  # G is column-stochastic
+
+
+@pytest.mark.slow
+def test_stanford_replica_statistics():
+    g = stanford_web_replica(seed=0)
+    assert g.n == STANFORD_N
+    assert abs(g.nnz - STANFORD_NNZ) <= STANFORD_NNZ * 0.02
+    assert g.dangling_mask.sum() == STANFORD_DANGLING

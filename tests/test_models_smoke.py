@@ -1,0 +1,107 @@
+"""Required per-arch smoke tests: reduced config, one forward + one train
+step on CPU, output shapes + no NaNs."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SMOKE_REGISTRY, REGISTRY, ARCH_NAMES
+from repro.models.param import init_params, count_params
+from repro.models.transformer import model_defs, forward
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+ARCHS = list(SMOKE_REGISTRY)
+
+
+def make_inputs(cfg, B=2, S=16, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.is_encdec:
+        batch["enc_inputs"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (B, S, cfg.d_model),
+            cfg.dtype()) * 0.1
+    if cfg.prefix_len:
+        batch["prefix_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (B, cfg.prefix_len, cfg.d_model),
+            cfg.dtype()) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = SMOKE_REGISTRY[arch]
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    batch = make_inputs(cfg)
+    kwargs = {k: v for k, v in batch.items() if k != "tokens"}
+    logits, aux = forward(params, cfg, batch["tokens"], **kwargs)
+    S_total = batch["tokens"].shape[1] + cfg.prefix_len
+    assert logits.shape == (2, S_total, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = SMOKE_REGISTRY[arch]
+    opt_cfg = OptConfig(peak_lr=1e-3, warmup_steps=2, total_steps=10)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = make_inputs(cfg)
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed
+    changed = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        state["params"], new_state["params"])
+    assert max(jax.tree_util.tree_leaves(changed)) > 0
+    assert int(new_state["opt"]["step"]) == 1
+
+
+def test_all_archs_registered():
+    assert len(ARCH_NAMES) == 10
+    for name in ARCH_NAMES:
+        assert name in REGISTRY and name in SMOKE_REGISTRY
+
+
+def test_full_config_dims():
+    """Spot-check the full (assigned) configs against the assignment."""
+    c = REGISTRY["deepseek-v3-671b"]
+    assert (c.n_layers, c.d_model, c.n_heads) == (61, 7168, 128)
+    assert c.n_experts == 256 and c.top_k == 8 and c.use_mla
+    c = REGISTRY["yi-6b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (32, 4096, 32, 4)
+    assert c.d_ff == 11008 and c.vocab_size == 64_000
+    c = REGISTRY["mamba2-2.7b"]
+    assert c.n_layers == 64 and c.d_model == 2560 and c.ssm_state == 128
+    assert c.layer_kinds() == ("ssd",) * 64
+    c = REGISTRY["recurrentgemma-2b"]
+    assert c.layer_kinds()[:3] == ("rglru", "rglru", "local_attn")
+    c = REGISTRY["paligemma-3b"]
+    assert c.vocab_size == 257_216 and c.prefix_len == 256
+    c = REGISTRY["whisper-base"]
+    assert c.n_enc_layers == 6 and c.padded_vocab % 128 == 0
+
+
+def test_vocab_padding_divisible_by_tp():
+    for name, c in REGISTRY.items():
+        assert c.padded_vocab % 16 == 0, name
+
+
+def test_param_counts_in_range():
+    """Full configs should land near their advertised sizes."""
+    expected = {"deepseek-v3-671b": (550e9, 750e9),
+                "yi-6b": (5e9, 7e9),
+                "qwen1.5-4b": (3e9, 5e9),
+                "minitron-4b": (3.5e9, 5.3e9),
+                "mamba2-2.7b": (2.2e9, 3.2e9),
+                "paligemma-3b": (2.2e9, 3.2e9),
+                "recurrentgemma-2b": (2.2e9, 3.4e9),
+                "smollm-360m": (0.3e9, 0.45e9),
+                "whisper-base": (0.05e9, 0.11e9)}
+    for name, (lo, hi) in expected.items():
+        n = count_params(model_defs(REGISTRY[name]))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,37 @@
+import numpy as np
+import pytest
+
+from repro.core import solve_power, solve_linear, rank_of, kendall_tau_topk
+
+
+def test_power_matches_exact(small_op, exact_x):
+    r = solve_power(small_op, tol=1e-12, max_iters=2000)
+    assert np.abs(r.x - exact_x).max() < 1e-10
+    assert r.iters < 2000
+
+
+def test_linear_matches_exact(small_op, exact_x):
+    r = solve_linear(small_op, tol=1e-12, max_iters=2000)
+    assert np.abs(r.x - exact_x).max() < 1e-10
+
+
+def test_power_and_linear_agree(small_op):
+    rp = solve_power(small_op, tol=1e-12)
+    rl = solve_linear(small_op, tol=1e-12)
+    assert np.abs(rp.x - rl.x).max() < 1e-10
+
+
+def test_float32_path(small_op, exact_x):
+    import jax.numpy as jnp
+    r = solve_power(small_op, tol=1e-6, max_iters=500, dtype=jnp.float32)
+    assert np.abs(r.x - exact_x).max() < 1e-4
+
+
+def test_rank_utilities(exact_x):
+    r = rank_of(exact_x)
+    assert exact_x[r[0]] == exact_x.max()
+    tau = kendall_tau_topk(exact_x, exact_x, k=100)
+    assert tau == pytest.approx(1.0)
+    noisy = exact_x * (1 + 1e-9 * np.random.default_rng(0)
+                       .standard_normal(len(exact_x)))
+    assert kendall_tau_topk(exact_x, noisy, k=100) > 0.95

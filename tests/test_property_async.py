@@ -1,0 +1,81 @@
+"""Property tests of the paper's core mathematical claim (hypothesis):
+bounded-staleness iterations on a contraction converge to the same fixed
+point regardless of the (arbitrary, adversarial) delay pattern. This is a
+direct numpy model of eq. (5), independent of the DES implementation."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+
+def _random_google(rng, n, alpha=0.85):
+    """Dense random column-stochastic R = alpha*S plus b = (1-alpha)/n."""
+    A = (rng.random((n, n)) < 0.3).astype(float)
+    np.fill_diagonal(A, 0)
+    deg = A.sum(axis=1)
+    P = np.divide(A, np.maximum(deg[:, None], 1), where=deg[:, None] > 0)
+    S = P.T.copy()
+    dang = deg == 0
+    S[:, dang] = 1.0 / n
+    return alpha * S, np.full(n, (1 - alpha) / n)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_bounded_staleness_converges_to_fixed_point(seed, p, max_delay):
+    rng = np.random.default_rng(seed)
+    n = 12
+    R, b = _random_google(rng, n)
+    x_star = np.linalg.solve(np.eye(n) - R, b)
+
+    # partition rows into p blocks, iterate with random bounded delays
+    bounds = np.linspace(0, n, p + 1).astype(int)
+    history = [np.full(n, 1.0 / n)]
+    for t in range(400):
+        x_new = history[-1].copy()
+        for i in range(p):
+            s, e = bounds[i], bounds[i + 1]
+            if e <= s:
+                continue
+            # each peer fragment read at an arbitrary stale time
+            view = np.empty(n)
+            for j in range(p):
+                sj, ej = bounds[j], bounds[j + 1]
+                delay = 0 if j == i else int(rng.integers(0, max_delay + 1))
+                src = history[max(0, len(history) - 1 - delay)]
+                view[sj:ej] = src[sj:ej]
+            x_new[s:e] = R[s:e] @ view + b[s:e]
+        history.append(x_new)
+        if len(history) > max_delay + 2:
+            history.pop(0)
+
+    assert np.abs(history[-1] - x_star).max() < 1e-8
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_power_form_converges_up_to_scale(seed):
+    """Lubachevsky–Mitra: the normalization-free power form with stale reads
+    converges to the eigenvector up to a positive scalar."""
+    rng = np.random.default_rng(seed)
+    n = 10
+    R, b = _random_google(rng, n, alpha=0.85)
+    # G = R + v e^T (1-alpha): column-stochastic
+    G = R + np.outer(np.full(n, 0.15 / n), np.ones(n))
+    w, v = np.linalg.eig(G)
+    k = np.argmax(np.abs(w))
+    x_star = np.real(v[:, k])
+    x_star = x_star / x_star.sum()
+
+    x = np.full(n, 1.0 / n)
+    hist = [x]
+    for t in range(600):
+        view = hist[max(0, len(hist) - 1 - int(rng.integers(0, 3)))]
+        i = int(rng.integers(0, 2))
+        half = n // 2
+        (s, e) = (0, half) if i == 0 else (half, n)
+        x = hist[-1].copy()
+        x[s:e] = G[s:e] @ view
+        hist.append(x)
+        if len(hist) > 5:
+            hist.pop(0)
+    x = x / x.sum()
+    assert np.abs(x - x_star).max() < 1e-6

