@@ -1,0 +1,20 @@
+PY := python
+export PYTHONPATH := src
+
+.PHONY: test test-fast bench-quick bench verify
+
+test:
+	$(PY) -m pytest -q
+
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick
+
+bench:
+	$(PY) -m benchmarks.run
+
+# tier-1 gate + the quick benchmark pass that refreshes BENCH_PR1.json —
+# run this before every PR
+verify: test bench-quick

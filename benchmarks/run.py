@@ -2,6 +2,10 @@
 beyond-paper studies. Prints ``name,us_per_call,derived`` CSV at the end.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Every run (including --quick) starts with the matvec-backend bench and
+writes the machine-readable perf-trajectory file BENCH_PR1.json at the repo
+root; --quick then skips the slow DES paper-table and SPMD studies.
 """
 from __future__ import annotations
 
@@ -24,25 +28,44 @@ def main() -> None:
     csv_rows = [("name", "us_per_call", "derived")]
     t_all = time.time()
 
-    from benchmarks import paper_tables
-    print("== Paper Table 1 (sync vs async, 2/4/6 UEs) ==")
-    op = paper_tables._ops()
+    print("== Matvec backends (segment_sum vs bsr_pallas) -> BENCH_PR1.json ==")
+    from benchmarks import backend_bench
     t0 = time.time()
-    rows1 = paper_tables.table1(op)
-    csv_rows.append(("table1_paper_repro", f"{(time.time()-t0)*1e6:.0f}",
-                     f"speedups={[r['speedup'] for r in rows1]}"))
+    brec = backend_bench.main()
+    big = brec["apply"][-1]
+    csv_rows.append((
+        "backend_apply",
+        f"{big['bsr_pallas_us_per_apply']:.0f}",
+        f"n={big['n']}:segsum={big['segment_sum_us_per_apply']:.0f}us,"
+        f"bsr={big['bsr_pallas_us_per_apply']:.0f}us,"
+        f"tau100={brec['solver']['kendall_tau_top100']:.4f}"))
+    csv_rows.append((
+        "bsr_packing",
+        f"{brec['packing']['acceptance_scale']['solve_grade_cold_ms']*1e3:.0f}",
+        f"vs_seed_at_32k="
+        f"{brec['packing']['largest_seed_packable']['speedup']:.1f}x,"
+        f"seed_at_50k=OOM"))
 
-    print("== Paper Table 2 (completed imports) ==")
-    t0 = time.time()
-    rec2 = paper_tables.table2(op)
-    csv_rows.append(("table2_imports", f"{(time.time()-t0)*1e6:.0f}",
-                     f"completed_pct={rec2['completed_pct']}"))
+    if not args.quick:
+        from benchmarks import paper_tables
+        print("== Paper Table 1 (sync vs async, 2/4/6 UEs) ==")
+        op = paper_tables._ops()
+        t0 = time.time()
+        rows1 = paper_tables.table1(op)
+        csv_rows.append(("table1_paper_repro", f"{(time.time()-t0)*1e6:.0f}",
+                         f"speedups={[r['speedup'] for r in rows1]}"))
 
-    print("== Rank quality vs relaxed thresholds (paper §5.2 question) ==")
-    t0 = time.time()
-    rq = paper_tables.rank_quality(op)
-    csv_rows.append(("rank_quality", f"{(time.time()-t0)*1e6:.0f}",
-                     f"tau100@1e-6={next(r['kendall_tau_top100'] for r in rq if r['local_tol']==1e-6)}"))
+        print("== Paper Table 2 (completed imports) ==")
+        t0 = time.time()
+        rec2 = paper_tables.table2(op)
+        csv_rows.append(("table2_imports", f"{(time.time()-t0)*1e6:.0f}",
+                         f"completed_pct={rec2['completed_pct']}"))
+
+        print("== Rank quality vs relaxed thresholds (paper §5.2 question) ==")
+        t0 = time.time()
+        rq = paper_tables.rank_quality(op)
+        csv_rows.append(("rank_quality", f"{(time.time()-t0)*1e6:.0f}",
+                         f"tau100@1e-6={next(r['kendall_tau_top100'] for r in rq if r['local_tol']==1e-6)}"))
 
     if not args.skip_spmd and not args.quick:
         print("== SPMD bounded-staleness schedules (8 host devices) ==")

@@ -1,6 +1,7 @@
 """Core: asynchronous iterative fixed-point computation (the paper's
 contribution) — engine facade, DES + SPMD flavors, termination protocol."""
 from .engine import AsyncFixedPoint
+from .backend import BackendSpec, BACKENDS
 from .des import AsyncDES, DESConfig, AsyncResult, SyncResult, \
     PageRankBlockOperator
 from .partition import Partition, block_rows, balanced_nnz
@@ -11,7 +12,8 @@ from .termination import ComputingUEState, MonitorState, Msg, \
     CentralizedProtocol, TreeProtocol, TreeNodeState
 
 __all__ = [
-    "AsyncFixedPoint", "AsyncDES", "DESConfig", "AsyncResult", "SyncResult",
+    "AsyncFixedPoint", "BackendSpec", "BACKENDS",
+    "AsyncDES", "DESConfig", "AsyncResult", "SyncResult",
     "PageRankBlockOperator", "Partition", "block_rows", "balanced_nnz",
     "solve_power", "solve_linear", "SolveResult", "rank_of",
     "kendall_tau_topk", "solve_spmd", "SPMDConfig", "SPMDResult",

@@ -28,6 +28,8 @@ class AsyncFixedPoint:
     op: GoogleOperator
     kind: str = "power"            # power (eq. 6) | linear (eq. 7)
     partition: str = "block"       # block (paper) | balanced_nnz
+    backend: str = "segment_sum"   # segment_sum | bsr_pallas (see
+                                   # docs/backends.md for the tradeoff)
 
     def make_partition(self, p: int) -> Partition:
         if self.partition == "balanced_nnz":
@@ -35,26 +37,35 @@ class AsyncFixedPoint:
         return block_rows(self.op.n, p)
 
     def solve_sync(self, tol: float = 1e-9, max_iters: int = 1000,
-                   dtype="float64") -> SolveResult:
+                   dtype="float64", **kw) -> SolveResult:
         import jax.numpy as jnp
         dt = jnp.float64 if dtype == "float64" else jnp.float32
         fn = solve_power if self.kind == "power" else solve_linear
-        return fn(self.op, tol=tol, max_iters=max_iters, dtype=dt)
+        return fn(self.op, tol=tol, max_iters=max_iters, dtype=dt,
+                  backend=self.backend, **kw)
 
     def solve_des(self, p: int, cfg: Optional[DESConfig] = None
                   ) -> AsyncResult:
         cfg = cfg or DESConfig()
         part = self.make_partition(p)
-        opr = PageRankBlockOperator(self.op, part, kind=self.kind)
+        opr = PageRankBlockOperator(self.op, part, kind=self.kind,
+                                    matvec=self._des_matvec())
         return AsyncDES(opr, part, cfg, check_operator=self.op).run()
 
     def solve_des_sync(self, p: int, cfg: Optional[DESConfig] = None
                        ) -> SyncResult:
         cfg = cfg or DESConfig()
         part = self.make_partition(p)
-        opr = PageRankBlockOperator(self.op, part, kind=self.kind)
+        opr = PageRankBlockOperator(self.op, part, kind=self.kind,
+                                    matvec=self._des_matvec())
         return AsyncDES(opr, part, cfg, check_operator=self.op).run_sync()
 
     def solve_spmd(self, cfg: SPMDConfig) -> SPMDResult:
-        cfg = dataclasses.replace(cfg, kind=self.kind)
+        cfg = dataclasses.replace(cfg, kind=self.kind,
+                                  backend=self.backend)
         return solve_spmd(self.op, cfg)
+
+    def _des_matvec(self) -> str:
+        # the DES engine is host-side numpy/scipy; scipy's native BSR
+        # matvec is the closest CPU analogue of the blocked device path
+        return "bsr" if self.backend == "bsr_pallas" else "csr"

@@ -4,98 +4,143 @@ linear-system Jacobi/Richardson iteration derived from eq. (2), in JAX.
 These are the single-program (device-side) solvers; the asynchronous
 counterparts live in core.des (faithful message-level simulation) and
 core.spmd (TPU-native bounded-staleness shard_map flavor).
+
+The per-iteration operator apply is delegated to a pluggable backend
+(core.backend): `segment_sum` (default) or `bsr_pallas` (hub-split block-CSR
+— the MXU kernel on TPU). Both solvers accept (n, nv) teleport/initial
+stacks, solving nv personalized PageRank problems in one fused loop.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Union
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from ..graph.google import GoogleOperator
-from ..graph.csr import pt_matvec
+from .backend import (BackendSpec, BackendMeta, as_spec, prepare,
+                      from_layout, google_apply, l1_residual)
 
 
 @dataclasses.dataclass
 class SolveResult:
-    x: np.ndarray
+    x: np.ndarray                 # (n,) or (n, nv) normalized iterate(s)
     iters: int
-    resid_l1: float
+    resid_l1: float               # max over lanes
+    resid_per_vec: Optional[np.ndarray] = None  # (nv,) when nv > 1
 
 
-def _google_apply(dev: dict, x: jax.Array, alpha: float, n: int,
-                  linear: bool) -> jax.Array:
-    y = alpha * pt_matvec(dev, x, n)
-    dangling_mass = jnp.sum(jnp.where(dev["dangling"], x, 0.0))
-    y = y + alpha * dangling_mass / n
-    if linear:
-        y = y + (1.0 - alpha) * dev["v"]
-    else:
-        y = y + (1.0 - alpha) * jnp.sum(x) * dev["v"]
-    return y
-
-
-@partial(jax.jit, static_argnames=("n", "alpha", "linear", "tol", "max_iters"))
-def _solve_jit(dev: dict, x0: jax.Array, *, n: int, alpha: float,
-               linear: bool, tol: float, max_iters: int):
+@partial(jax.jit, static_argnames=("meta", "linear", "tol", "max_iters"))
+def _solve_jit(dev: dict, x0: jax.Array, *, meta: BackendMeta, linear: bool,
+               tol: float, max_iters: int):
+    """Fused fixed-point loop: the iterate never leaves the backend layout
+    (for bsr_pallas that is the padded (nbr, bm, nv) block layout — no
+    repacking between iterations)."""
     def cond(state):
         _, resid, it = state
-        return jnp.logical_and(resid > tol, it < max_iters)
+        return jnp.logical_and(jnp.max(resid) > tol, it < max_iters)
 
     def body(state):
         x, _, it = state
-        y = _google_apply(dev, x, alpha, n, linear)
-        resid = jnp.sum(jnp.abs(y - x))
+        y = google_apply(meta, dev, x, linear)
+        resid = l1_residual(y, x)
         return y, resid, it + 1
 
-    x0 = x0.astype(dev["v"].dtype)
-    state = (x0, jnp.asarray(jnp.inf, dev["v"].dtype), jnp.asarray(0))
+    resid0 = jnp.full((meta.nv,), jnp.inf, x0.dtype)
+    state = (x0, resid0, jnp.asarray(0))
     x, resid, iters = jax.lax.while_loop(cond, body, state)
     return x, resid, iters
 
 
 def solve_power(op: GoogleOperator, x0: Optional[np.ndarray] = None,
                 tol: float = 1e-9, max_iters: int = 1000,
-                dtype=jnp.float64) -> SolveResult:
+                dtype=jnp.float64,
+                backend: Union[str, BackendSpec] = "segment_sum",
+                v: Optional[np.ndarray] = None,
+                reorder: Optional[str] = None) -> SolveResult:
     """Normalization-free power method x <- G x (eq. 4).
 
     No per-step normalization is needed: G is column-stochastic so ||x||_1
     is invariant (paper §3) and there is no over/underflow risk.
+
+    `v`/`x0` may be (n, nv) stacks — nv personalized PageRank problems share
+    every operator load. `backend="bsr_pallas"` runs the hub-split BSR path
+    (float32; L1 residuals floor near 1e-7). `reorder` ("rcm" | "indeg")
+    solves in a block-densifying page permutation and maps the answer back.
     """
-    return _solve(op, x0, tol, max_iters, linear=False, dtype=dtype)
+    return _solve(op, x0, tol, max_iters, linear=False, dtype=dtype,
+                  backend=backend, v=v, reorder=reorder)
 
 
 def solve_linear(op: GoogleOperator, x0: Optional[np.ndarray] = None,
                  tol: float = 1e-9, max_iters: int = 1000,
-                 dtype=jnp.float64) -> SolveResult:
+                 dtype=jnp.float64,
+                 backend: Union[str, BackendSpec] = "segment_sum",
+                 v: Optional[np.ndarray] = None,
+                 reorder: Optional[str] = None) -> SolveResult:
     """Jacobi/Richardson on (I - R) x = b (eq. 2 / eq. 7 sync form)."""
-    return _solve(op, x0, tol, max_iters, linear=True, dtype=dtype)
+    return _solve(op, x0, tol, max_iters, linear=True, dtype=dtype,
+                  backend=backend, v=v, reorder=reorder)
 
 
-def _solve(op, x0, tol, max_iters, linear, dtype) -> SolveResult:
-    import contextlib
+def _reordered(op: GoogleOperator, method: str):
+    """Memoized (reordered op, perm) so repeated solves do not re-permute
+    the graph or re-pack its BSR blocks."""
+    from ..graph.reorder import reorder_operator
+    cache = op._cache()
+    key = ("reorder", method)
+    if key not in cache:
+        cache[key] = reorder_operator(op, method)
+    return cache[key]
+
+
+def _solve(op, x0, tol, max_iters, linear, dtype, backend="segment_sum",
+           v=None, reorder=None) -> SolveResult:
+    spec = as_spec(backend)
+    squeeze = ((x0 is None or np.ndim(x0) == 1)
+               and (v is None or np.ndim(v) == 1)
+               and (v is not None or op.v is None or np.ndim(op.v) == 1))
+
+    perm = None
+    if reorder is not None:
+        op, perm = _reordered(op, reorder)
+        if v is not None:
+            v = np.asarray(v, dtype=np.float64)
+            vp = np.empty_like(v)
+            vp[perm] = v
+            v = vp
+        if x0 is not None:
+            x0 = np.asarray(x0, dtype=np.float64)
+            xp = np.empty_like(x0)
+            xp[perm] = x0
+            x0 = xp
+
     # scope x64 to this solve — flipping the global flag poisons later
-    # bf16/f32 model code in the same process
-    ctx = (jax.experimental.enable_x64() if dtype == jnp.float64
-           else contextlib.nullcontext())
+    # bf16/f32 model code in the same process. The bsr path is float32
+    # end to end, so it never needs the x64 scope.
+    use_x64 = dtype == jnp.float64 and spec.name == "segment_sum"
+    ctx = jax.experimental.enable_x64() if use_x64 else contextlib.nullcontext()
     with ctx:
-        n = op.n
-        dev = op.device_arrays(dtype=dtype)
-        if x0 is None:
-            x0 = jnp.full((n,), 1.0 / n, dtype=dtype)
-        else:
-            x0 = jnp.asarray(x0, dtype=dtype)
-        x, resid, iters = _solve_jit(dev, x0, n=n, alpha=float(op.alpha),
-                                     linear=linear, tol=tol,
-                                     max_iters=max_iters)
-    x = np.asarray(x, dtype=np.float64)
-    s = x.sum()
-    if s > 0:
-        x = x / s
-    return SolveResult(x=x, iters=int(iters), resid_l1=float(resid))
+        dev, meta, x0_dev = prepare(op, spec, dtype=dtype, v=v, x0=x0)
+        x_dev, resid, iters = _solve_jit(dev, x0_dev, meta=meta,
+                                         linear=linear, tol=tol,
+                                         max_iters=max_iters)
+        x = from_layout(meta, x_dev)
+        resid = np.asarray(resid, dtype=np.float64)
+
+    if perm is not None:
+        x = x[perm]
+    s = x.sum(axis=0)
+    x = np.where(s > 0, x / np.where(s > 0, s, 1.0), x)
+    nv = x.shape[1]
+    if squeeze and nv == 1:
+        x = x[:, 0]
+    return SolveResult(x=x, iters=int(iters), resid_l1=float(resid.max()),
+                       resid_per_vec=resid if nv > 1 else None)
 
 
 def rank_of(x: np.ndarray) -> np.ndarray:

@@ -23,6 +23,12 @@ collective schedules:
                             the stale copy, exactly like eq. (5) with larger
                             tau.
 
+Every schedule's local update runs through the selected matvec backend
+(cfg.backend): "segment_sum" (gather + segment-sum over the shard's edge
+slice) or "bsr_pallas" (each UE packs its own block-row slice of P^T into
+the hub-split BSR layout once, then every superstep is dense block
+multiplies + a small segment-sum side path — the MXU form on TPU).
+
 Convergence for all schedules follows from bounded delays (Frommer-Szyld
 [15]; Lubachevsky-Mitra [21] for the unit-spectral-radius power form).
 Termination detection runs in-loop: per-shard persistence counters plus a
@@ -58,6 +64,10 @@ class SPMDConfig:
     kind: str = "power"          # power (eq. 6) | linear (eq. 7)
     dtype: str = "float32"
     seed: int = 0
+    backend: str = "segment_sum"  # segment_sum | bsr_pallas
+    bsr_bm: int = 0               # block edge; 0 = auto (128 TPU / 8 CPU)
+    bsr_impl: str = "auto"        # auto | pallas | interpret | ref
+    hub_quantile: float = 0.99    # rows above this row-nnz quantile -> COO
 
 
 @dataclasses.dataclass
@@ -68,33 +78,153 @@ class SPMDResult:
     comm_bytes_per_step: int     # payload bytes moved per superstep (model)
 
 
-def _pack_blocks(op: GoogleOperator, part: Partition, dtype):
-    """Pad per-block edge slices of P^T to a common edge budget so the
-    sharded arrays have static shapes."""
+def _hash_uniform(seed: int, step: jax.Array, lane: jax.Array) -> jax.Array:
+    """Counter-based uniform in [0, 1): a SplitMix-style integer mix of
+    (seed, superstep, shard). jax.random inside shard_map lowers to a
+    PartitionId instruction XLA's SPMD partitioner rejects; this hash is
+    deterministic, partitionable, and plenty for a drop model."""
+    z = (step.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+         + lane.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+         + jnp.uint32(seed & 0xFFFFFFFF))
+    z = (z ^ (z >> 16)) * jnp.uint32(0x7FEB352D)
+    z = (z ^ (z >> 15)) * jnp.uint32(0x846CA68B)
+    z = z ^ (z >> 16)
+    return z.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+def _resolve_bsr(cfg: SPMDConfig) -> Tuple[int, str]:
+    """Resolve auto block size / impl with the same policy as the solver
+    backends (single source of truth in BackendSpec.resolved())."""
+    from .backend import BackendSpec
+    spec = BackendSpec(name="bsr_pallas", impl=cfg.bsr_impl,
+                       bm=cfg.bsr_bm).resolved()
+    return spec.bm, spec.impl
+
+
+def _pack_blocks(op: GoogleOperator, part: Partition, dtype,
+                 cfg: SPMDConfig):
+    """Pad per-block state of P^T to common budgets so the sharded arrays
+    have static shapes.
+
+    segment_sum: per-shard edge slices padded to a common edge count.
+    bsr_pallas : per-shard hub-split BSR — a global hub mask (row-nnz
+                 quantile over all pages) splits each shard's edges; the
+                 block-CSR parts share one K budget, the COO hub parts one
+                 edge budget.
+    Always packed: per-shard teleport fragments and a valid-row mask (the
+    scalar dangling/teleport corrections must not leak into padding rows).
+    """
     from .partition import slice_transition
 
     p = part.p
-    blocks = [slice_transition(op.pt, part, i) for i in range(p)]
-    emax = max(b["src"].shape[0] for b in blocks)
     bsize = int(part.sizes().max())
+    if cfg.backend == "bsr_pallas":
+        bm, _ = _resolve_bsr(cfg)
+        bsize = -(-bsize // bm) * bm       # block-align every fragment
     n = part.n
+    n_pad = p * bsize
 
-    src = np.zeros((p, emax), dtype=np.int32)
-    wgt = np.zeros((p, emax), dtype=dtype)
-    rid = np.zeros((p, emax), dtype=np.int32)
-    vblk = np.zeros((p, bsize), dtype=dtype)
+    blocks = [slice_transition(op.pt, part, i) for i in range(p)]
     v = op.teleport()
-    for i, b in enumerate(blocks):
-        e = b["src"].shape[0]
-        src[i, :e] = b["src"]
-        wgt[i, :e] = b["weight"]
-        rid[i, :e] = b["row_ids"]
+    vblk = np.zeros((p, bsize), dtype=dtype)
+    valid = np.zeros((p, bsize), dtype=dtype)
+    for i in range(p):
         s, t = part.block(i)
         vblk[i, : t - s] = v[s:t]
-    dang = np.zeros((n,), dtype=bool)
-    dang[: op.pt.dangling.shape[0]] = op.pt.dangling
-    return dict(src=src, wgt=wgt, rid=rid, vblk=vblk, dang=dang,
-                emax=emax, bsize=bsize)
+        valid[i, : t - s] = 1.0
+    # the dangling mask lives in *packed-view* coordinates: with
+    # block-aligned fragments the view rows shift relative to page ids
+    dang = np.zeros((n_pad,), dtype=bool)
+    for i in range(p):
+        s, t = part.block(i)
+        dang[i * bsize: i * bsize + (t - s)] = op.pt.dangling[s:t]
+
+    packed = dict(vblk=vblk, valid=valid, dang=dang, bsize=bsize,
+                  n_pad=n_pad)
+
+    if cfg.backend == "bsr_pallas":
+        from ..kernels.bsr_spmv import build_bsr
+        row_nnz = np.diff(op.pt.indptr)
+        if cfg.hub_quantile < 1.0:
+            cut = np.quantile(row_nnz, cfg.hub_quantile)
+            hub_row = row_nnz > cut
+        else:
+            hub_row = np.zeros(n, dtype=bool)
+
+        # per-shard split; columns live in packed-view coordinates
+        col_map = np.zeros(n, dtype=np.int64)
+        for j in range(p):
+            s, t = part.block(j)
+            col_map[s:t] = np.arange(j * bsize, j * bsize + (t - s))
+
+        shard = []
+        for i, b in enumerate(blocks):
+            s, t = part.block(i)
+            rows_g = b["row_ids"].astype(np.int64) + s
+            is_hub = hub_row[rows_g]
+            shard.append(dict(
+                rows=b["row_ids"].astype(np.int64)[~is_hub],
+                cols=col_map[b["src"].astype(np.int64)[~is_hub]],
+                vals=np.asarray(b["weight"], dtype=np.float32)[~is_hub],
+                h_rows=b["row_ids"].astype(np.int64)[is_hub],
+                h_cols=col_map[b["src"].astype(np.int64)[is_hub]],
+                h_vals=np.asarray(b["weight"], dtype=np.float32)[is_hub],
+            ))
+
+        # shared K budget across shards (static shapes under shard_map)
+        nbc_g = n_pad // bm
+        K = 1
+        for sh in shard:
+            key = np.unique((sh["rows"] // bm) * nbc_g + sh["cols"] // bm)
+            if len(key):
+                per = np.bincount((key // nbc_g).astype(np.int64),
+                                  minlength=bsize // bm)
+                K = max(K, int(per.max()))
+        hmax = max(1, max(len(sh["h_rows"]) for sh in shard))
+
+        nbr_l = bsize // bm
+        blk = np.zeros((p, nbr_l, K, bm, bm), dtype=np.float32)
+        bcols = np.zeros((p, nbr_l, K), dtype=np.int32)
+        hrow = np.zeros((p, hmax), dtype=np.int32)
+        hcol = np.zeros((p, hmax), dtype=np.int32)
+        hval = np.zeros((p, hmax), dtype=np.float32)
+        fills = []
+        for i, sh in enumerate(shard):
+            b = build_bsr(sh["rows"], sh["cols"], sh["vals"],
+                          n_rows=bsize, n_cols=n_pad, bm=bm, bn=bm,
+                          k_budget=K, unique_pairs=True)
+            blk[i] = b.blocks
+            bcols[i] = b.blk_cols
+            e = len(sh["h_rows"])
+            hrow[i, :e] = sh["h_rows"]
+            hcol[i, :e] = sh["h_cols"]
+            hval[i, :e] = sh["h_vals"]
+            fills.append(b.fill_ratio)
+        packed.update(blk=blk, bcols=bcols, hrow=hrow, hcol=hcol, hval=hval,
+                      K=K, bm=bm, fill_ratio=float(np.mean(fills)))
+    else:
+        emax = max(b["src"].shape[0] for b in blocks)
+        src = np.zeros((p, emax), dtype=np.int32)
+        wgt = np.zeros((p, emax), dtype=dtype)
+        rid = np.zeros((p, emax), dtype=np.int32)
+        for i, b in enumerate(blocks):
+            e = b["src"].shape[0]
+            # sources also live in packed-view coordinates
+            src[i, :e] = col_map_seg(part, bsize, b["src"])
+            wgt[i, :e] = b["weight"]
+            rid[i, :e] = b["row_ids"]
+        packed.update(src=src, wgt=wgt, rid=rid, emax=emax)
+    return packed
+
+
+def col_map_seg(part: Partition, bsize: int, cols: np.ndarray) -> np.ndarray:
+    """Map global column ids into packed-view coordinates (identity when
+    fragments are unpadded, shifted when block-aligned)."""
+    out = np.empty(len(cols), dtype=np.int32)
+    owners = np.searchsorted(np.asarray(part.ends), cols, side="right")
+    starts = np.asarray(part.starts)
+    out[:] = owners * bsize + (cols - starts[owners])
+    return out
 
 
 def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
@@ -109,64 +239,84 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
 
     # uniform blocks (paper's ceil(n/p) scheme) padded to p * bsize
     part = block_rows(n, p)
-    packed = _pack_blocks(op, part, np.dtype(cfg.dtype))
+    packed = _pack_blocks(op, part, np.dtype(cfg.dtype), cfg)
     bsize = packed["bsize"]
-    n_pad = p * bsize
-
-    dang_pad = np.zeros(n_pad, dtype=bool)
-    dang_pad[:n] = packed["dang"]
+    n_pad = packed["n_pad"]
 
     alpha = float(op.alpha)
     linear = cfg.kind == "linear"
     tol = cfg.tol
     q = cfg.delivery_prob
     seed = cfg.seed
+    use_bsr = cfg.backend == "bsr_pallas"
+    if use_bsr:
+        bm, bsr_impl = _resolve_bsr(cfg)
 
     # device inputs, sharded over 'ue'
     sh = lambda *spec: jax.NamedSharding(mesh, P(*spec))
-    src = jax.device_put(packed["src"], sh("ue", None))
-    wgt = jax.device_put(packed["wgt"], sh("ue", None))
-    rid = jax.device_put(packed["rid"], sh("ue", None))
     vblk = jax.device_put(packed["vblk"], sh("ue", None))
-    dang = jax.device_put(np.broadcast_to(dang_pad, (p, n_pad)).copy(),
-                          sh("ue", None))
-    x0_blocks = np.full((p, bsize), 1.0 / n, dtype=cfg.dtype)
-    # zero the padded tail of the last block
-    pad = n_pad - n
-    if pad:
-        x0_blocks[-1, bsize - pad:] = 0.0
+    valid = jax.device_put(packed["valid"], sh("ue", None))
+    dang = jax.device_put(
+        np.broadcast_to(packed["dang"], (p, n_pad)).copy(), sh("ue", None))
+    x0_blocks = (np.full((p, bsize), 1.0 / n, dtype=cfg.dtype)
+                 * packed["valid"].astype(cfg.dtype))
     x0 = jax.device_put(x0_blocks, sh("ue", None))
 
-    def body_fn(src, wgt, rid, vblk, dang, x0):
-        """Runs on one shard: src/wgt/rid (1, emax), vblk/x0 (1, bsize),
-        dang (1, n_pad)."""
-        src_, wgt_, rid_, vb_, dg_, myx = (
-            src[0], wgt[0], rid[0], vblk[0], dang[0], x0[0])
+    if use_bsr:
+        op_args = tuple(jax.device_put(packed[k], sh("ue", *([None] * nd)))
+                        for k, nd in (("blk", 4), ("bcols", 2), ("hrow", 1),
+                                      ("hcol", 1), ("hval", 1)))
+    else:
+        op_args = tuple(jax.device_put(packed[k], sh("ue", None))
+                        for k in ("src", "wgt", "rid"))
+
+    def body_fn(vblk, valid, dang, x0, *op_args):
+        """Runs on one shard. vblk/valid/x0: (1, bsize), dang: (1, n_pad);
+        op_args are the shard's operator slice (edge or block form)."""
+        vb_, val_, dg_, myx = vblk[0], valid[0], dang[0], x0[0]
         i = jax.lax.axis_index("ue")
 
-        def local_update(view, frag):
-            """f_i: new own fragment from the (stale) full view."""
-            contrib = wgt_ * view[src_]
-            y = alpha * jax.ops.segment_sum(contrib, rid_, num_segments=bsize)
+        if use_bsr:
+            from ..kernels.bsr_spmv import bsr_matvec
+            blk_, bcols_, hrow_, hcol_, hval_ = (a[0] for a in op_args)
+
+            def pt_apply(view):
+                xb = view.astype(jnp.float32).reshape(n_pad // bm, bm, 1)
+                y = bsr_matvec(blk_, bcols_, xb, impl=bsr_impl)
+                hub = jax.ops.segment_sum(
+                    hval_ * view.astype(jnp.float32)[hcol_], hrow_,
+                    num_segments=bsize)
+                return (y.reshape(bsize) + hub).astype(view.dtype)
+        else:
+            src_, wgt_, rid_ = (a[0] for a in op_args)
+
+            def pt_apply(view):
+                contrib = wgt_ * view[src_]
+                return jax.ops.segment_sum(contrib, rid_,
+                                           num_segments=bsize)
+
+        def local_update(view):
+            """f_i: new own fragment from the (stale) full view. The scalar
+            dangling/teleport corrections are masked so the block-aligned
+            padding rows stay exactly zero."""
+            y = alpha * pt_apply(view)
             dmass = jnp.sum(jnp.where(dg_, view, 0.0))
-            y = y + alpha * dmass / n
+            y = y + alpha * dmass / n * val_
             if linear:
                 y = y + (1.0 - alpha) * vb_
             else:
                 y = y + (1.0 - alpha) * jnp.sum(view) * vb_
-            return y
+            return y * val_
 
         perm = [(j, (j + 1) % p) for j in range(p)]
 
         def superstep(carry):
             view, frag, ring, step, pc, mon_pc, done = carry
-            newfrag = local_update(view, frag)
+            newfrag = local_update(view)
             resid = jnp.max(jnp.abs(newfrag - frag))
 
             # ---- communication -------------------------------------------
-            key = jax.random.fold_in(
-                jax.random.fold_in(jax.random.PRNGKey(seed), step), i)
-            accept = jax.random.uniform(key) < q
+            accept = _hash_uniform(seed, step, i) < q
 
             if cfg.schedule == "ring" and p > 1:
                 ring_in = jax.lax.ppermute(ring, "ue", perm)
@@ -211,27 +361,32 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
             *_, step, pc, mon_pc, done = carry
             return jnp.logical_and(~done, step < cfg.max_supersteps)
 
-        view0 = jnp.zeros((n_pad,), dtype) + jnp.asarray(1.0 / n, dtype)
-        if pad:
-            view0 = view0.at[n:].set(0.0)
+        view0 = jax.lax.all_gather(myx, "ue").reshape(n_pad)
         carry = (view0, myx, myx, jnp.asarray(0), jnp.asarray(0),
                  jnp.asarray(0), jnp.asarray(False))
         view, frag, ring, step, pc, mon_pc, done = jax.lax.while_loop(
             cond, lambda c: superstep(c), carry)
-        resid = jnp.max(jnp.abs(local_update(view, frag) - frag))
+        resid = jnp.max(jnp.abs(local_update(view) - frag))
         return frag[None], step[None], resid[None]
 
     mapped = shard_map(
         body_fn, mesh=mesh,
-        in_specs=(P("ue", None),) * 6,
+        in_specs=(P("ue", None),) * 4
+        + tuple(P("ue", *([None] * (a.ndim - 1))) for a in op_args),
         out_specs=(P("ue", None), P("ue"), P("ue")),
         check_rep=False,
     )
-    frags, steps, resids = jax.jit(mapped)(src, wgt, rid, vblk, dang, x0)
-    x = np.asarray(frags, dtype=np.float64).reshape(n_pad)[:n]
-    s = x.sum()
-    if s > 0:
-        x = x / s
+    frags, steps, resids = jax.jit(mapped)(vblk, valid, dang, x0, *op_args)
+
+    # un-pack: drop each fragment's block-alignment padding
+    frag_mat = np.asarray(frags, dtype=np.float64)
+    x = np.empty(n, dtype=np.float64)
+    for i in range(p):
+        s, t = part.block(i)
+        x[s:t] = frag_mat[i, : t - s]
+    s_ = x.sum()
+    if s_ > 0:
+        x = x / s_
 
     frag_bytes = bsize * np.dtype(cfg.dtype).itemsize
     if cfg.schedule == "ring":

@@ -54,8 +54,12 @@ class CSRGraph:
 
     @staticmethod
     def from_edges(n: int, src: np.ndarray, dst: np.ndarray) -> "CSRGraph":
-        """Build from an edge list, removing duplicate and self-referential
-        bookkeeping is left to the caller (duplicates removed here)."""
+        """Build from an edge list.
+
+        Duplicate (src, dst) pairs are collapsed to a single edge here.
+        Self-loops are KEPT: a page may link to itself and the transition
+        weight 1/outdeg then counts that link (callers that want a loop-free
+        graph must filter src == dst before calling)."""
         key = src.astype(np.int64) * n + dst.astype(np.int64)
         key = np.unique(key)
         src_u = (key // n).astype(np.int64)
@@ -115,21 +119,45 @@ class TransitionT:
         )
 
     # ---- device-side (JAX) matvec --------------------------------------
-    def device_arrays(self):
-        """Arrays needed on device for the segment-sum matvec."""
-        return dict(
+    def device_arrays(self, dtype=None):
+        """Arrays needed on device for the segment-sum matvec.
+
+        Results are memoized per dtype so repeated solves against the same
+        operator reuse the device buffers instead of re-uploading the edge
+        arrays every call (TransitionT is immutable, so this is safe).
+        """
+        # the x64 flag changes what asarray/astype produce, so it is part
+        # of the cache key (an f32 array must not satisfy an f64 request)
+        key = ("native" if dtype is None else np.dtype(dtype).name,
+               bool(jax.config.jax_enable_x64))
+        cache = self.__dict__.get("_dev_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_dev_cache", cache)
+        hit = cache.get(key)
+        if hit is not None:
+            return dict(hit)
+        w = jnp.asarray(self.weight)
+        if dtype is not None:
+            w = w.astype(dtype)
+        dev = dict(
             src=jnp.asarray(self.src),
-            weight=jnp.asarray(self.weight),
+            weight=w,
             row_ids=jnp.asarray(self.row_ids),
         )
+        cache[key] = dev
+        return dict(dev)
 
 
 def pt_matvec(dev: dict, x: jax.Array, n: int) -> jax.Array:
     """y = P^T x as gather + segment-sum (TPU-friendly; no scatter).
 
+    x may be a single vector (n,) or an (n, nv) stack of iterates (nv
+    personalized PageRank problems sharing every edge gather).
     dev comes from TransitionT.device_arrays().
     """
-    contrib = dev["weight"] * x[dev["src"]]
+    w = dev["weight"] if x.ndim == 1 else dev["weight"][:, None]
+    contrib = w * x[dev["src"]]
     return jax.ops.segment_sum(contrib, dev["row_ids"], num_segments=n)
 
 

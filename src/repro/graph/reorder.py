@@ -48,3 +48,35 @@ def degree_sort_permutation(g: CSRGraph) -> np.ndarray:
     indeg = np.bincount(g.indices, minlength=g.n)
     order = np.argsort(-indeg, kind="stable").astype(np.int64)
     return invert(order)
+
+
+def reorder_operator(op, method: str = "indeg"):
+    """Permute a GoogleOperator's page ids to densify BSR blocks.
+
+    method: "rcm" | "indeg", or a precomputed permutation array with
+    perm[old_id] = new_id. Returns (op_perm, perm); the teleportation vector
+    rides along (v_perm[perm] = v, lane-wise for (n, nv) stacks). A solution
+    x_perm in the permuted space maps back as x = x_perm[perm].
+    """
+    import dataclasses as _dc
+    from .csr import TransitionT
+    from .google import GoogleOperator  # local import avoids a cycle
+
+    g = CSRGraph.from_edges(op.n, op.pt.src.astype(np.int64),
+                            op.pt.row_ids.astype(np.int64))
+    if isinstance(method, np.ndarray):
+        perm = method.astype(np.int64)
+    elif method == "rcm":
+        perm = rcm_permutation(g)
+    elif method == "indeg":
+        perm = degree_sort_permutation(g)
+    else:
+        raise ValueError(f"unknown reorder method {method!r}")
+    g2 = apply_permutation(g, perm)
+    v2 = None
+    if op.v is not None:
+        v = np.asarray(op.v, dtype=np.float64)
+        v2 = np.empty_like(v)
+        v2[perm] = v
+    op2 = GoogleOperator(pt=TransitionT.from_graph(g2), alpha=op.alpha, v=v2)
+    return op2, perm

@@ -5,6 +5,10 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")
+
+
 @pytest.fixture(scope="session")
 def small_graph():
     from repro.graph.generate import powerlaw_webgraph

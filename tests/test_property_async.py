@@ -3,6 +3,9 @@ bounded-staleness iterations on a contraction converge to the same fixed
 point regardless of the (arbitrary, adversarial) delay pattern. This is a
 direct numpy model of eq. (5), independent of the DES implementation."""
 import numpy as np
+import pytest
+hypothesis = pytest.importorskip(
+    "hypothesis")  # not baked into every container image
 from hypothesis import given, settings, strategies as st
 
 

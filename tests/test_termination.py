@@ -1,6 +1,8 @@
 """Fig. 1 protocol: unit tests + hypothesis properties."""
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip(
+    "hypothesis")  # not baked into every container image
 from hypothesis import given, settings, strategies as st
 
 from repro.core.termination import (ComputingUEState, MonitorState, Msg,
