@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench-quick bench verify
+.PHONY: test test-fast bench-quick bench verify stream-demo
 
 test:
 	$(PY) -m pytest -q
@@ -15,6 +15,11 @@ bench-quick:
 bench:
 	$(PY) -m benchmarks.run
 
-# tier-1 gate + the quick benchmark pass that refreshes BENCH_PR1.json —
-# run this before every PR
+# update-while-serve demo: evolving 50k graph, async updater, DES replay
+stream-demo:
+	$(PY) examples/streaming_rank_server.py
+
+# tier-1 gate + the quick benchmark pass that refreshes BENCH_PR<N>.json
+# (currently BENCH_PR2.json; see benchmarks/run.py --out) — run before
+# every PR
 verify: test bench-quick

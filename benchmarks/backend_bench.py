@@ -2,8 +2,9 @@
 several graph sizes, the host-side BSR packing micro-bench (bincount scatter
 vs the old np.add.at scatter), and a solver-level rank-agreement record.
 
-Writes the machine-readable perf trajectory file BENCH_PR1.json at the repo
-root (consumed by CI / later PRs to track the hot path over time).
+Writes the machine-readable perf trajectory file (BENCH_PR<N>.json at the
+repo root, consumed by CI / later PRs to track the hot path over time);
+benchmarks.run passes the current PR's path via ``--out``.
 """
 from __future__ import annotations
 
@@ -192,9 +193,9 @@ def solver_bench(n=50_000, nnz=400_000, seed=3):
     return rec
 
 
-def main(out_path: Path = REPO_ROOT / "BENCH_PR1.json"):
+def main(out_path: Path = REPO_ROOT / "BENCH_PR2.json"):
     rec = dict(
-        bench="matvec backends (PR 1)",
+        bench="matvec backends",
         device=jax.default_backend(),
         note=("us_per_apply is the fused Google-apply (SpMV + dangling + "
               "teleport) per backend; on CPU bsr_pallas lowers to the "

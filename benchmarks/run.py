@@ -1,11 +1,12 @@
 """Benchmark orchestrator — one section per paper table/figure plus the
 beyond-paper studies. Prints ``name,us_per_call,derived`` CSV at the end.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_PRN.json]
 
-Every run (including --quick) starts with the matvec-backend bench and
-writes the machine-readable perf-trajectory file BENCH_PR1.json at the repo
-root; --quick then skips the slow DES paper-table and SPMD studies.
+Every run (including --quick) starts with the matvec-backend bench and the
+streaming-update bench and writes the machine-readable perf-trajectory file
+(``--out``, default BENCH_PR2.json) at the repo root; --quick then skips
+the slow DES paper-table and SPMD studies.
 """
 from __future__ import annotations
 
@@ -15,6 +16,7 @@ import sys
 import time
 from pathlib import Path
 
+REPO_ROOT = Path(__file__).parent.parent
 RESULTS = Path(__file__).parent / "results"
 
 
@@ -23,15 +25,22 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
+    ap.add_argument("--out", default="BENCH_PR2.json",
+                    help="perf-trajectory output (BENCH_PR<N>.json for "
+                         "PR N; relative paths land at the repo root)")
     args = ap.parse_args()
+    out_path = Path(args.out)
+    if not out_path.is_absolute():
+        out_path = REPO_ROOT / out_path
 
     csv_rows = [("name", "us_per_call", "derived")]
     t_all = time.time()
 
-    print("== Matvec backends (segment_sum vs bsr_pallas) -> BENCH_PR1.json ==")
+    print(f"== Matvec backends (segment_sum vs bsr_pallas) -> "
+          f"{out_path.name} ==")
     from benchmarks import backend_bench
     t0 = time.time()
-    brec = backend_bench.main()
+    brec = backend_bench.main(out_path=out_path)
     big = brec["apply"][-1]
     csv_rows.append((
         "backend_apply",
@@ -45,6 +54,22 @@ def main() -> None:
         f"vs_seed_at_32k="
         f"{brec['packing']['largest_seed_packable']['speedup']:.1f}x,"
         f"seed_at_50k=OOM"))
+
+    print("== Streaming incremental updates (push vs fallback) ==")
+    from benchmarks import streaming_bench
+    srec = streaming_bench.main()
+    single = srec["delta_sweep"]["sweep"][0]
+    csv_rows.append((
+        "streaming_delta",
+        f"{single['us_per_batch']:.0f}",
+        f"single_edge:{single['path']}:visited"
+        f"{100 * single['visited_frac']:.1f}%:"
+        f"{single['speedup_vs_cold']:.0f}x_vs_cold,"
+        f"fresh={srec['replay']['fresh_pct']:.0f}%"))
+    brec["streaming"] = srec
+    out_path.write_text(json.dumps(brec, indent=1))
+    (RESULTS / "streaming_bench.json").write_text(
+        json.dumps(srec, indent=1))
 
     if not args.quick:
         from benchmarks import paper_tables

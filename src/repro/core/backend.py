@@ -205,3 +205,19 @@ def l1_residual(y: jax.Array, x: jax.Array) -> jax.Array:
     in both layouts so no masking is needed."""
     d = jnp.abs(y - x)
     return jnp.sum(d, axis=tuple(range(d.ndim - 1)))
+
+
+def take_lanes(meta: BackendMeta, dev: dict, x: jax.Array,
+               idx: np.ndarray) -> Tuple[dict, BackendMeta, jax.Array]:
+    """Slice the lane (last) axis of the per-solve state down to `idx`.
+
+    Used by the per-lane-freezing driver: converged lanes are compacted out
+    of the fused apply so the remaining lanes stop paying for them.  Only
+    the teleport stack and the iterate carry a lane axis; the structural
+    device state (edges, blocks, masks) is lane-invariant and shared.
+    """
+    idx = np.asarray(idx, dtype=np.int64)
+    dev = dict(dev)
+    dev["v"] = dev["v"][..., idx]
+    meta = dataclasses.replace(meta, nv=int(idx.size))
+    return dev, meta, x[..., idx]

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from ..graph.google import GoogleOperator
 from .backend import (BackendSpec, BackendMeta, as_spec, prepare,
-                      from_layout, google_apply, l1_residual)
+                      from_layout, google_apply, l1_residual, take_lanes)
 
 
 @dataclasses.dataclass
@@ -32,6 +32,8 @@ class SolveResult:
     iters: int
     resid_l1: float               # max over lanes
     resid_per_vec: Optional[np.ndarray] = None  # (nv,) when nv > 1
+    lane_iters: Optional[np.ndarray] = None     # (nv,) iterations per lane
+                                                # (differs under freezing)
 
 
 @partial(jax.jit, static_argnames=("meta", "linear", "tol", "max_iters"))
@@ -56,12 +58,75 @@ def _solve_jit(dev: dict, x0: jax.Array, *, meta: BackendMeta, linear: bool,
     return x, resid, iters
 
 
+def _pow2(k: int) -> int:
+    return 1 << max(k - 1, 0).bit_length()
+
+
+def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
+                  max_iters: int, chunk: int):
+    """Chunked driver that freezes converged lanes out of the fused apply.
+
+    The fused while_loop only ever guarantees each lane's residual <= tol
+    (it stops at max-over-lanes), so freezing a lane once its residual
+    crosses tol preserves the solver contract exactly — fast lanes just
+    stop paying for the slowest one.  Lanes are compacted at power-of-two
+    stack widths (padding duplicates an active lane), bounding recompiles
+    of the fused loop to log2(nv).
+    """
+    nv = meta.nv
+    n = meta.n
+    x_out = np.empty((n, nv))
+    resid_out = np.full(nv, np.inf)
+    lane_iters = np.zeros(nv, dtype=np.int64)
+    active = np.arange(nv)          # lane ids at stack positions 0..k-1
+    width = _pow2(nv)
+    if width > nv:
+        pad = np.concatenate([np.arange(nv),
+                              np.zeros(width - nv, np.int64)])
+        dev, meta, x_dev = take_lanes(meta, dev, x_dev, pad)
+    it_total = 0
+    while True:
+        step = min(chunk, max_iters - it_total)
+        x_dev, resid_dev, it = _solve_jit(dev, x_dev, meta=meta,
+                                          linear=linear, tol=tol,
+                                          max_iters=step)
+        it = int(it)
+        it_total += it
+        lane_iters[active] += it
+        resid_np = np.asarray(resid_dev, dtype=np.float64)[:active.size]
+        done = resid_np <= tol
+        if done.all() or it_total >= max_iters:
+            x_np = from_layout(meta, x_dev)
+            x_out[:, active] = x_np[:, :active.size]
+            resid_out[active] = resid_np
+            break
+        new_width = _pow2(int((~done).sum()))
+        if done.any() and new_width < width:
+            # freeze + compact: record the converged lanes, keep the rest
+            frozen = active[done]
+            x_np = from_layout(meta, x_dev)
+            x_out[:, frozen] = x_np[:, :active.size][:, done]
+            resid_out[frozen] = resid_np[done]
+            keep_pos = np.flatnonzero(~done)
+            active = active[~done]
+            idx = np.concatenate([keep_pos,
+                                  np.full(new_width - keep_pos.size,
+                                          keep_pos[0], np.int64)])
+            dev, meta, x_dev = take_lanes(meta, dev, x_dev, idx)
+            width = new_width
+        # lanes at <= tol that do not trigger a compaction stay in the
+        # stack (their slots exist anyway) and keep improving for free
+    return x_out, resid_out, it_total, lane_iters
+
+
 def solve_power(op: GoogleOperator, x0: Optional[np.ndarray] = None,
                 tol: float = 1e-9, max_iters: int = 1000,
                 dtype=jnp.float64,
                 backend: Union[str, BackendSpec] = "segment_sum",
                 v: Optional[np.ndarray] = None,
-                reorder: Optional[str] = None) -> SolveResult:
+                reorder: Optional[str] = None,
+                freeze_lanes: Union[bool, str] = "auto",
+                freeze_chunk: int = 32) -> SolveResult:
     """Normalization-free power method x <- G x (eq. 4).
 
     No per-step normalization is needed: G is column-stochastic so ||x||_1
@@ -71,9 +136,15 @@ def solve_power(op: GoogleOperator, x0: Optional[np.ndarray] = None,
     every operator load. `backend="bsr_pallas"` runs the hub-split BSR path
     (float32; L1 residuals floor near 1e-7). `reorder` ("rcm" | "indeg")
     solves in a block-densifying page permutation and maps the answer back.
+
+    `freeze_lanes` masks already-converged lanes out of the fused apply
+    (chunked driver, power-of-two lane compaction) so large teleport
+    batches stop paying for their slowest lane; "auto" enables it from
+    nv >= 8.  Every lane still stops at residual <= tol.
     """
     return _solve(op, x0, tol, max_iters, linear=False, dtype=dtype,
-                  backend=backend, v=v, reorder=reorder)
+                  backend=backend, v=v, reorder=reorder,
+                  freeze_lanes=freeze_lanes, freeze_chunk=freeze_chunk)
 
 
 def solve_linear(op: GoogleOperator, x0: Optional[np.ndarray] = None,
@@ -81,10 +152,13 @@ def solve_linear(op: GoogleOperator, x0: Optional[np.ndarray] = None,
                  dtype=jnp.float64,
                  backend: Union[str, BackendSpec] = "segment_sum",
                  v: Optional[np.ndarray] = None,
-                 reorder: Optional[str] = None) -> SolveResult:
+                 reorder: Optional[str] = None,
+                 freeze_lanes: Union[bool, str] = "auto",
+                 freeze_chunk: int = 32) -> SolveResult:
     """Jacobi/Richardson on (I - R) x = b (eq. 2 / eq. 7 sync form)."""
     return _solve(op, x0, tol, max_iters, linear=True, dtype=dtype,
-                  backend=backend, v=v, reorder=reorder)
+                  backend=backend, v=v, reorder=reorder,
+                  freeze_lanes=freeze_lanes, freeze_chunk=freeze_chunk)
 
 
 def _reordered(op: GoogleOperator, method: str):
@@ -99,7 +173,8 @@ def _reordered(op: GoogleOperator, method: str):
 
 
 def _solve(op, x0, tol, max_iters, linear, dtype, backend="segment_sum",
-           v=None, reorder=None) -> SolveResult:
+           v=None, reorder=None, freeze_lanes="auto",
+           freeze_chunk=32) -> SolveResult:
     spec = as_spec(backend)
     squeeze = ((x0 is None or np.ndim(x0) == 1)
                and (v is None or np.ndim(v) == 1)
@@ -126,11 +201,20 @@ def _solve(op, x0, tol, max_iters, linear, dtype, backend="segment_sum",
     ctx = jax.experimental.enable_x64() if use_x64 else contextlib.nullcontext()
     with ctx:
         dev, meta, x0_dev = prepare(op, spec, dtype=dtype, v=v, x0=x0)
-        x_dev, resid, iters = _solve_jit(dev, x0_dev, meta=meta,
-                                         linear=linear, tol=tol,
-                                         max_iters=max_iters)
-        x = from_layout(meta, x_dev)
-        resid = np.asarray(resid, dtype=np.float64)
+        freeze = (meta.nv >= 8 if freeze_lanes == "auto"
+                  else bool(freeze_lanes)) and meta.nv > 1
+        if freeze:
+            x, resid, iters, lane_iters = _solve_frozen(
+                dev, x0_dev, meta, linear, tol, max_iters,
+                max(int(freeze_chunk), 1))
+        else:
+            x_dev, resid, iters = _solve_jit(dev, x0_dev, meta=meta,
+                                             linear=linear, tol=tol,
+                                             max_iters=max_iters)
+            x = from_layout(meta, x_dev)
+            resid = np.asarray(resid, dtype=np.float64)
+            iters = int(iters)
+            lane_iters = np.full(meta.nv, iters, dtype=np.int64)
 
     if perm is not None:
         x = x[perm]
@@ -140,7 +224,8 @@ def _solve(op, x0, tol, max_iters, linear, dtype, backend="segment_sum",
     if squeeze and nv == 1:
         x = x[:, 0]
     return SolveResult(x=x, iters=int(iters), resid_l1=float(resid.max()),
-                       resid_per_vec=resid if nv > 1 else None)
+                       resid_per_vec=resid if nv > 1 else None,
+                       lane_iters=lane_iters)
 
 
 def rank_of(x: np.ndarray) -> np.ndarray:

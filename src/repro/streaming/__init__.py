@@ -1,0 +1,32 @@
+"""Streaming PageRank: incremental push-based updates on evolving graphs
+and an update-while-serve rank server (see docs/streaming.md).
+
+Layers:
+  delta        — EdgeDelta / DeltaGraph: COO delta log over a CSR base with
+                 periodic compaction and per-version operator views.
+  incremental  — update_ranks: Gauss-Southwell residual pushes seeded at
+                 touched rows, warm-started backend-solver fallback, L1
+                 certification bound.
+  server       — RankServer: double-buffered snapshots, atomic publish,
+                 top_k/scores/personalized queries with staleness metadata.
+  scenario     — edge-stream replay (freshness vs throughput, the Table-2
+                 mirror) and the BlockOperator bridge into core.des.
+"""
+from .delta import (CSRGraph, DeltaGraph, DeltaReceipt, EdgeDelta,
+                    FrozenGraphView, merge_deltas)
+from .incremental import (RankState, UpdateStats, cold_state, ppr_push,
+                          refresh_residual, update_ranks)
+from .server import RankServer, RankSnapshot
+from .scenario import (BatchRecord, ReplayConfig, ReplayResult,
+                       StreamingBlockOperator, replay_trace,
+                       synth_edge_trace)
+
+__all__ = [
+    "DeltaGraph", "DeltaReceipt", "EdgeDelta", "FrozenGraphView",
+    "merge_deltas",
+    "RankState", "UpdateStats", "cold_state", "ppr_push",
+    "refresh_residual", "update_ranks",
+    "RankServer", "RankSnapshot",
+    "BatchRecord", "ReplayConfig", "ReplayResult",
+    "StreamingBlockOperator", "replay_trace", "synth_edge_trace",
+]

@@ -1,0 +1,423 @@
+"""Incremental PageRank: push-based residual diffusion on evolving graphs.
+
+The linear form of the paper (eq. 2) solves (I - alpha S) x = b with
+b = (1 - alpha) v and S = P^T + w d^T column-stochastic.  For any iterate x
+define the residual
+
+    r = b + alpha S x - x        (so  x* = x + (I - alpha S)^{-1} r).
+
+Since ||S||_1 = 1, the certification bound
+
+    ||x - x*||_1  <=  ||r||_1 / (1 - alpha)                       (cert)
+
+holds unconditionally — every state this module returns carries it.
+
+A graph delta perturbs only the transition *columns* of sources whose
+out-row changed, so the residual of the previous solution against the new
+operator is the previous residual plus a sparse seed:
+
+    r_new = r_prev + alpha * sum_{u touched} x[u] (col_new(u) - col_old(u))
+            [+ uniform terms when n or the dangling set changes]
+
+`update_ranks` seeds exactly those rows and drains the residual with
+Gauss-Southwell/queue pushes (Hong et al., 1501.06350 "D-Iteration"; the
+randomized-order convergence is Ishii & Tempo, 1203.6599): popping node u
+moves r_u into x_u and diffuses alpha*r_u/deg(u) to its out-neighbors.
+Each push shrinks ||r||_1 by at least (1-alpha)|r_u|, so draining every
+|r_u| >= eps = (1-alpha)*tol/n certifies ||x - x*||_1 <= tol without ever
+touching the untouched part of the graph.  When the frontier exceeds a
+fraction of n the batch is no longer local and the updater falls back to a
+warm-started `solve_linear`/`solve_power` through `core.backend` (either
+backend), then recovers the exact residual with one host-side apply.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.pagerank import solve_linear, solve_power
+from .delta import DeltaGraph, EdgeDelta
+
+
+@dataclasses.dataclass
+class RankState:
+    """Mutable incremental-solver state: the rank estimate, its exactly
+    maintained residual, and the graph version both are consistent with."""
+
+    x: np.ndarray                    # (n,) float64 rank estimate
+    r: np.ndarray                    # (n,) float64 residual b + aSx - x
+    version: int
+    alpha: float
+    v: Optional[np.ndarray] = None   # None = uniform teleport
+
+    @property
+    def resid_l1(self) -> float:
+        return float(np.abs(self.r).sum())
+
+    @property
+    def cert(self) -> float:
+        """Certified L1 distance to the exact fixed point."""
+        return self.resid_l1 / (1.0 - self.alpha)
+
+
+@dataclasses.dataclass
+class UpdateStats:
+    path: str                 # "push" | "solve_linear" | "solve_power"
+    pushes: int               # frontier pops (work of the push phase)
+    nodes_visited: int        # distinct nodes popped
+    frontier_peak: int
+    seed_l1: float            # ||r||_1 right after seeding
+    resid_l1: float           # ||r||_1 on return
+    cert: float               # resid_l1 / (1 - alpha)
+    solver_iters: int = 0     # fallback iterations (0 on the push path)
+
+
+def _exact_residual(dg: DeltaGraph, x: np.ndarray, alpha: float,
+                    v: Optional[np.ndarray]) -> np.ndarray:
+    """r = b + alpha S x - x via one host-side O(nnz) apply (scipy P^T is
+    memoized per version on the DeltaGraph)."""
+    op = dg.operator(alpha, v=v)
+    y = op.apply_linear_numpy(x, pt_sp=dg.scipy_pt())
+    return y - x
+
+
+def _check_cert(resid_l1: float, tol: float, alpha: float,
+                where: str) -> None:
+    """The certificate is recomputed exactly, so a solver that stalled
+    (e.g. bsr_pallas's f32 residual floor ~1e-7 asked for a tighter
+    target) cannot silently violate the contract — it warns instead."""
+    if resid_l1 > (1.0 - alpha) * tol:
+        import warnings
+        cert = resid_l1 / (1.0 - alpha)
+        warnings.warn(
+            f"{where} missed the residual target: certified L1 error "
+            f"{cert:.2e} > tol {tol:.2e} (for bsr_pallas ask tol >= ~1e-5, "
+            f"or raise solver_max_iters)", RuntimeWarning, stacklevel=3)
+
+
+def cold_state(dg: DeltaGraph, alpha: float = 0.85,
+               v: Optional[np.ndarray] = None, tol: float = 1e-9,
+               backend: str = "segment_sum", method: str = "linear",
+               max_iters: int = 2000) -> RankState:
+    """Full solve on the current graph, returning a certified RankState.
+
+    `tol` is the certified L1 error: the solver is driven to residual
+    (1 - alpha) * tol, then the residual is recovered exactly."""
+    op = dg.operator(alpha, v=v)
+    solver = solve_linear if method == "linear" else solve_power
+    # 0.5x headroom: the solver renormalizes on exit, which perturbs the
+    # residual by O(resid); the exact recomputation below must still land
+    # under (1 - alpha) * tol.
+    res = solver(op, tol=0.5 * (1.0 - alpha) * tol, max_iters=max_iters,
+                 backend=backend)
+    x = np.asarray(res.x, dtype=np.float64)
+    r = _exact_residual(dg, x, alpha, v)
+    _check_cert(float(np.abs(r).sum()), tol, alpha,
+                f"cold_state[{backend}]")
+    return RankState(x=x, r=r, version=dg.version, alpha=alpha, v=v)
+
+
+def refresh_residual(dg: DeltaGraph, state: RankState) -> RankState:
+    """Re-derive the residual exactly (drops any accumulated float error
+    from long incremental chains)."""
+    if state.version != dg.version:
+        raise ValueError("state is stale; apply pending deltas through "
+                         "update_ranks first")
+    state.r = _exact_residual(dg, state.x, state.alpha, state.v)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# the push kernel (shared by update_ranks and personalized queries)
+# ---------------------------------------------------------------------------
+def _push(view, x: np.ndarray, r: np.ndarray, alpha: float,
+          l1_target: float, visit_cap: int, max_pushes: int,
+          c_holder: Optional[list] = None) -> Tuple[bool, int, int, int]:
+    """Gauss-Southwell pushes against `view` (anything with .n and
+    .out_neighbors) until ||r||_1 <= l1_target.  Mutates x and r in place.
+
+    ||r||_1 is maintained incrementally (each push adjusts it by the exact
+    change on the touched slice) and re-derived at round boundaries, so the
+    loop stops the moment the certificate holds instead of draining every
+    node to the worst-case per-node threshold.  Rounds sweep a coarse-to-
+    fine threshold eps (largest mass first — the Gauss-Southwell order,
+    batched); eps bottoms out at l1_target/n, where an empty frontier
+    implies ||r||_1 < n * eps = l1_target.
+
+    A push from a dangling node diffuses uniformly (column = e/n).  With
+    `c_holder` (a one-element list; uniform-teleport problems only) that
+    mass accumulates into the scalar c — the caller resolves c exactly via
+    the rescale identity, see update_ranks — keeping the push local.
+    Without it the uniform mass is added densely.
+
+    Returns (certified, pushes, distinct_visited, frontier_peak);
+    certified=False when a work cap fired first (callers fall back to a
+    full solve).
+    """
+    n = view.n
+    l1 = float(np.abs(r).sum())
+    eps_floor = l1_target / max(n, 1)
+    eps = max(l1 / max(n, 1), eps_floor)
+    in_q = np.zeros(n, dtype=bool)
+    visited = np.zeros(n, dtype=bool)
+    n_visited = 0
+    pushes = 0
+    peak = 0
+    row_cache = {}
+    while l1 > l1_target:
+        cand = np.flatnonzero(np.abs(r) >= eps)
+        if cand.size == 0:
+            if eps <= eps_floor:
+                break   # all |r_u| < eps_floor  =>  l1 < n*eps_floor
+            eps = max(eps / 8.0, eps_floor)
+            continue
+        q = deque(int(u) for u in cand)
+        in_q[:] = False
+        in_q[cand] = True
+        peak = max(peak, len(q))
+        # drain this threshold; the 0.95 margin absorbs incremental-l1
+        # float drift (the exact recompute below has the final word)
+        while q and l1 > 0.95 * l1_target:
+            u = q.popleft()
+            in_q[u] = False
+            ru = r[u]
+            if abs(ru) < eps:
+                continue
+            pushes += 1
+            if not visited[u]:
+                visited[u] = True
+                n_visited += 1
+                if n_visited > visit_cap:
+                    return False, pushes, n_visited, peak
+            if pushes > max_pushes:
+                return False, pushes, n_visited, peak
+            x[u] += ru
+            r[u] = 0.0
+            nbrs = row_cache.get(u)
+            if nbrs is None:
+                nbrs = view.out_neighbors(u)
+                row_cache[u] = nbrs
+            d = nbrs.size
+            if d == 0:
+                if c_holder is not None:
+                    # uniform mass goes to the scalar; resolved by rescale
+                    c_holder[0] += alpha * ru / n
+                    l1 -= abs(ru)
+                else:
+                    # dangling column = e/n: a dense uniform push, then a
+                    # rescan (a uniform shift can lift anything over eps)
+                    r += alpha * ru / n
+                    l1 = float(np.abs(r).sum())
+                    newly = np.flatnonzero((np.abs(r) >= eps) & ~in_q)
+                    in_q[newly] = True
+                    q.extend(int(w) for w in newly)
+            else:
+                add = alpha * ru / d
+                old = r[nbrs]
+                new = old + add
+                l1 += float(np.abs(new).sum() - np.abs(old).sum()) - abs(ru)
+                r[nbrs] = new
+                hot = nbrs[(np.abs(new) >= eps) & ~in_q[nbrs]]
+                in_q[hot] = True
+                q.extend(int(w) for w in hot)
+            if len(q) > peak:
+                peak = len(q)
+        l1 = float(np.abs(r).sum())   # exact at every round boundary
+        if l1 <= l1_target:
+            break
+        eps = max(eps / 8.0, eps_floor)
+    return True, pushes, n_visited, peak
+
+
+# ---------------------------------------------------------------------------
+# the updater
+# ---------------------------------------------------------------------------
+def update_ranks(dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
+                 tol: float = 1e-8, backend: str = "segment_sum",
+                 method: str = "linear", push_frontier_frac: float = 0.10,
+                 max_push_factor: float = 20.0,
+                 solver_max_iters: int = 1000
+                 ) -> Tuple[RankState, UpdateStats]:
+    """Apply `delta` to `dg` and bring `state` to a certified solution of
+    the mutated graph.
+
+    Small, local deltas take the scalar frontier-push path (sub-linear:
+    only rows the residual actually reaches are visited).  When the seeded
+    frontier or the visited set exceeds ``push_frontier_frac * n``, the
+    batch is global and the updater falls back to a warm-started
+    `solve_linear` (or `solve_power`, per ``method``) on the requested
+    backend; the exact residual is then recovered with one O(nnz) apply.
+
+    On return ``state.cert <= tol`` (certified ||x - x*||_1) whenever the
+    drain or fallback reached its target; a fallback solver that stalls —
+    e.g. bsr_pallas's f32 residual floor (~1e-7) asked for a tighter
+    target — emits a RuntimeWarning and the true (larger) certificate is
+    reported in ``state.cert``/``stats.cert``.  `state` is mutated in
+    place and also returned.
+    """
+    if state.version != dg.version:
+        raise ValueError(
+            f"state at version {state.version} but graph at {dg.version}; "
+            "states must track every delta (or be rebuilt via cold_state)")
+    if method not in ("linear", "power"):
+        raise ValueError(f"unknown method {method!r}")
+    if delta.new_nodes and state.v is not None:
+        # checked BEFORE mutating the graph: raising after dg.apply would
+        # leave dg permanently ahead of every state tracking it
+        raise NotImplementedError(
+            "node arrivals with a custom teleport vector are not "
+            "supported incrementally; rebuild via cold_state")
+    alpha = state.alpha
+    rcpt = dg.apply(delta)
+    n0, n1 = rcpt.n_old, rcpt.n_new
+
+    # ---- seed ---------------------------------------------------------
+    if n1 != n0:
+        state.x = np.concatenate([state.x, np.zeros(n1 - n0)])
+        state.r = np.concatenate([state.r, np.zeros(n1 - n0)])
+    x, r = state.x, state.r
+
+    # Uniform residual components (a shrinking 1/n, uniform dangling
+    # columns) would be dense.  For the uniform-teleport problem they fold
+    # into a scalar c instead, resolved exactly at the end by the rescale
+    # identity: for any x with residual r = r_sparse + c e,
+    #     r(x / gamma) = r_sparse / gamma,   gamma = 1 - c n / (1 - alpha)
+    # (the teleport term of the residual regenerates exactly -c e under the
+    # rescale).  So pushes drain only r_sparse and stay local even for node
+    # arrivals and dangling sources.  Custom-teleport states take the dense
+    # route (c stays 0).
+    uniform = state.v is None
+    c = 0.0
+
+    if n1 != n0:
+        # teleport b = (1-alpha) e/n changed for every old node and exists
+        # for the arrivals; the dangling jump w = e/n of every *untouched*
+        # dangling source shrank too.  Touched sources are excluded here —
+        # the per-column seeds below use their exact old/new columns.
+        # Untouched nodes kept their degree, so the current (post-apply)
+        # dangling mask restricted to untouched old nodes is the old one.
+        untouched_dangling = dg.dangling_mask[:n0].copy()
+        old_touched = rcpt.touched[rcpt.touched < n0]
+        untouched_dangling[old_touched] = False
+        dm = float(x[:n0][untouched_dangling].sum())
+        amp = (1.0 - alpha) + alpha * dm
+        shift = (1.0 / n1 - 1.0 / n0)
+        # amp*shift on old nodes + amp/n1 on arrivals, decomposed as
+        # amp*shift uniformly everywhere + amp*(1/n1 - shift) on arrivals
+        c += amp * shift
+        r[n0:] += amp * (1.0 / n1 - shift)
+
+    for u, d0, d1, row0, row1 in zip(rcpt.touched, rcpt.old_deg,
+                                     rcpt.new_deg, rcpt.old_rows,
+                                     rcpt.new_rows):
+        xu = x[int(u)]
+        if xu == 0.0:
+            continue
+        if d0 > 0:
+            r[row0] -= alpha * xu / d0
+        else:
+            # old uniform column spans the old nodes only: uniformly
+            # -alpha*xu/n0 everywhere, corrected back on the arrivals
+            c -= alpha * xu / n0
+            r[n0:] += alpha * xu / n0
+        if d1 > 0:
+            r[row1] += alpha * xu / d1
+        else:
+            c += alpha * xu / n1
+
+    if not uniform and c != 0.0:
+        r += c          # dense fold-in; no rescale identity without e/n
+        c = 0.0
+
+    state.version = dg.version
+    seed_l1 = float(np.abs(r).sum()) + abs(c) * n1
+
+    # ---- push or fall back -------------------------------------------
+    n = n1
+    l1_target = (1.0 - alpha) * tol
+    visit_cap = max(int(push_frontier_frac * n), 1)
+    max_pushes = int(max_push_factor * n)
+    # worst-case frontier (count at the floor threshold); if even that is
+    # only modestly above the cap, attempting the push is cheap — _push
+    # aborts at visit_cap and the partial pushes still warm the fallback
+    frontier0 = int(np.count_nonzero(np.abs(r) >= l1_target / max(n, 1)))
+
+    if frontier0 <= 4 * visit_cap:
+        holder = [c] if uniform else None
+        drained, pushes, visited, peak = _push(
+            dg, x, r, alpha, 0.9 * l1_target, visit_cap, max_pushes,
+            c_holder=holder)
+        if holder is not None:
+            c = holder[0]
+        gamma = 1.0 - c * n / (1.0 - alpha)
+        if drained and abs(1.0 - gamma) < 0.5:
+            if c != 0.0:
+                # resolve the uniform component exactly (see above)
+                np.divide(x, gamma, out=x)
+                np.divide(r, gamma, out=r)
+            resid = float(np.abs(r).sum())
+            if resid <= l1_target:
+                return state, UpdateStats(
+                    path="push", pushes=pushes, nodes_visited=visited,
+                    frontier_peak=peak, seed_l1=seed_l1, resid_l1=resid,
+                    cert=resid / (1.0 - alpha))
+        elif c != 0.0:
+            r += c      # partial push aborted: fold c back before fallback
+    else:
+        pushes, visited, peak = 0, 0, frontier0
+
+    # ---- warm-started full solve -------------------------------------
+    op = dg.operator(alpha, v=state.v)
+    solver = solve_linear if method == "linear" else solve_power
+    res = solver(op, x0=state.x, tol=0.5 * (1.0 - alpha) * tol,
+                 max_iters=solver_max_iters, backend=backend)
+    state.x = np.asarray(res.x, dtype=np.float64)
+    state.r = _exact_residual(dg, state.x, alpha, state.v)
+    resid = state.resid_l1
+    _check_cert(resid, tol, alpha, f"solve_{method}[{backend}]")
+    return state, UpdateStats(
+        path=f"solve_{method}", pushes=pushes, nodes_visited=visited,
+        frontier_peak=peak, seed_l1=seed_l1, resid_l1=resid,
+        cert=resid / (1.0 - alpha), solver_iters=res.iters)
+
+
+# ---------------------------------------------------------------------------
+# personalized queries (serve-side): approximate PPR by the same pushes
+# ---------------------------------------------------------------------------
+def ppr_push(view, seeds, weights=None, alpha: float = 0.85,
+             tol: float = 1e-4, max_push_factor: float = 200.0
+             ) -> Tuple[np.ndarray, float, UpdateStats]:
+    """Personalized PageRank with teleport concentrated on `seeds`, solved
+    from scratch by residual pushes against a (frozen) graph view — the
+    serving-path analogue of `update_ranks` (localized seeds stay local).
+
+    Returns (x, cert, stats) with ||x - x*||_1 <= cert <= tol when the
+    push budget sufficed (cert is inf otherwise — the scores are still a
+    usable localized approximation, just uncertified).  Serving tolerances
+    are intentionally loose: draining single-seed mass by a factor f costs
+    about log(f)/log(1/alpha) frontier sweeps, so tol=1e-6-grade answers
+    are full solves in disguise — ask `solve_linear` for those.
+    """
+    n = view.n
+    seeds = np.asarray(seeds, dtype=np.int64).ravel()
+    if weights is None:
+        w = np.full(seeds.size, 1.0 / seeds.size)
+    else:
+        w = np.asarray(weights, dtype=np.float64).ravel()
+        w = w / w.sum()
+    x = np.zeros(n)
+    r = np.zeros(n)
+    np.add.at(r, seeds, (1.0 - alpha) * w)
+    drained, pushes, visited, peak = _push(
+        view, x, r, alpha, l1_target=(1.0 - alpha) * tol, visit_cap=n,
+        max_pushes=int(max_push_factor * n))
+    resid = float(np.abs(r).sum())
+    cert = resid / (1.0 - alpha)
+    if not drained:
+        cert = float("inf")
+    return x, cert, UpdateStats(
+        path="push", pushes=pushes, nodes_visited=visited,
+        frontier_peak=peak, seed_l1=1.0 - alpha, resid_l1=resid, cert=cert)

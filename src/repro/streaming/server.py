@@ -1,0 +1,235 @@
+"""Update-while-serve rank server.
+
+The ROADMAP's north star is a system that "serves heavy traffic from
+millions of users" while the graph keeps changing underneath it.  The
+`RankServer` realizes that over the streaming stack:
+
+  * two rank buffers: queries are answered from the **stable** snapshot
+    while the updater drains crawl deltas into the **working** state;
+  * publishing is an atomic reference swap (CPython reference assignment):
+    the working state is frozen into an immutable `RankSnapshot` (rank
+    vector copy marked read-only + a frozen graph view + staleness
+    metadata) and becomes the new stable buffer — readers never lock, never
+    block, and never observe a torn vector;
+  * every snapshot carries its certification bound (`cert`, the L1 distance
+    to the exact ranks of its own graph version) and staleness metadata
+    (graph version, publish time, deltas that were pending when it was
+    cut), so a caller can always tell *how* stale an answer is.
+
+Queries:
+    top_k(k)            — highest-rank pages from the stable buffer.
+    scores(ids)         — rank values for explicit pages.
+    personalized(seeds) — approximate personalized PageRank, computed by
+                          residual pushes against the snapshot's frozen
+                          graph view (localized, serve-side work only).
+
+The updater can run inline (`apply_pending()`, deterministic — what the
+tests drive) or as a daemon thread (`start()`/`stop()`) that drains the
+ingest queue in merged batches, the update-while-serve mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .delta import DeltaGraph, EdgeDelta, FrozenGraphView, merge_deltas
+from .incremental import (RankState, UpdateStats, cold_state, ppr_push,
+                          refresh_residual, update_ranks)
+
+
+@dataclasses.dataclass(frozen=True)
+class RankSnapshot:
+    """Immutable published view: the stable buffer queries read from."""
+
+    x: np.ndarray               # (n,) read-only rank vector
+    view: FrozenGraphView       # the graph this vector certifies against
+    version: int                # graph version of the vector
+    cert: float                 # certified ||x - x*||_1 for that version
+    published_at: float         # wall-clock publish time
+    pending_at_publish: int     # deltas still queued when this was cut
+    seq: int                    # publish sequence number
+
+    @property
+    def n(self) -> int:
+        return int(self.x.shape[0])
+
+    def top_k(self, k: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+        k = min(k, self.n)
+        part = np.argpartition(-self.x, k - 1)[:k]
+        order = part[np.argsort(-self.x[part], kind="stable")]
+        return order, self.x[order]
+
+    def scores(self, ids) -> np.ndarray:
+        return self.x[np.asarray(ids, dtype=np.int64)]
+
+
+class RankServer:
+    """Double-buffered PageRank serving over an evolving `DeltaGraph`."""
+
+    def __init__(self, dg: DeltaGraph, alpha: float = 0.85,
+                 tol: float = 1e-8, backend: str = "segment_sum",
+                 method: str = "linear",
+                 push_frontier_frac: float = 0.10,
+                 refresh_every: int = 64,
+                 cold_tol: Optional[float] = None):
+        self.dg = dg
+        self.alpha = alpha
+        self.tol = tol
+        self.backend = backend
+        self.method = method
+        self.push_frontier_frac = push_frontier_frac
+        self.refresh_every = refresh_every
+
+        # working buffer (updater-owned) + cold certification
+        self._state: RankState = cold_state(
+            dg, alpha=alpha, tol=cold_tol if cold_tol is not None else tol,
+            backend=backend, method=method)
+        self._queue: "queue.Queue[EdgeDelta]" = queue.Queue()
+        self._seq = 0
+        self._batches_since_refresh = 0
+        self._snapshot: RankSnapshot = self._cut_snapshot()
+
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self._lock = threading.Lock()   # serializes updater entry points
+        self._stat_lock = threading.Lock()  # telemetry counters (any thread)
+
+        # counters (telemetry; read-only for callers)
+        self.deltas_ingested = 0
+        self.batches_applied = 0
+        self.fallbacks = 0
+        self.queries_served = 0
+        self.last_stats: Optional[UpdateStats] = None
+
+    # ------------------------------------------------------------------
+    # the swap protocol
+    # ------------------------------------------------------------------
+    def _cut_snapshot(self) -> RankSnapshot:
+        x = self._state.x.copy()
+        x.setflags(write=False)
+        self._seq += 1
+        snap = RankSnapshot(
+            x=x, view=self.dg.freeze(), version=self._state.version,
+            cert=self._state.cert, published_at=time.time(),
+            pending_at_publish=self._queue.qsize(), seq=self._seq)
+        self._snapshot = snap   # atomic reference swap — the publish
+        return snap
+
+    def snapshot(self) -> RankSnapshot:
+        """The stable buffer (immutable; hold it as long as you like)."""
+        return self._snapshot
+
+    # ------------------------------------------------------------------
+    # ingest + update
+    # ------------------------------------------------------------------
+    def ingest(self, delta: EdgeDelta) -> None:
+        """Enqueue a crawl delta (any thread)."""
+        with self._stat_lock:
+            self.deltas_ingested += 1
+        self._queue.put(delta)
+
+    def _drain(self) -> List[EdgeDelta]:
+        out = []
+        while True:
+            try:
+                out.append(self._queue.get_nowait())
+            except queue.Empty:
+                return out
+
+    def apply_pending(self) -> Optional[UpdateStats]:
+        """Drain the queue, apply one merged batch, publish. Inline and
+        deterministic (the non-threaded mode); returns the update stats or
+        None when the queue was empty."""
+        with self._lock:
+            batch = self._drain()
+            if not batch:
+                return None
+            merged = merge_deltas(batch)
+            self._state, stats = update_ranks(
+                self.dg, merged, self._state, tol=self.tol,
+                backend=self.backend, method=self.method,
+                push_frontier_frac=self.push_frontier_frac)
+            self.batches_applied += 1
+            self._batches_since_refresh += 1
+            if stats.path != "push":
+                self.fallbacks += 1
+                self._batches_since_refresh = 0
+            elif self._batches_since_refresh >= self.refresh_every:
+                # long pure-push chains re-derive the residual exactly so
+                # float drift never silently erodes the certificate
+                refresh_residual(self.dg, self._state)
+                self._batches_since_refresh = 0
+            self.last_stats = stats
+            self._cut_snapshot()
+            return stats
+
+    # ------------------------------------------------------------------
+    # async updater (update-while-serve)
+    # ------------------------------------------------------------------
+    def start(self, poll_s: float = 0.01) -> None:
+        if self._thread is not None:
+            raise RuntimeError("updater already running")
+        self._stop_evt.clear()
+
+        def run():
+            while not self._stop_evt.is_set():
+                if self._queue.empty():
+                    self._stop_evt.wait(poll_s)
+                    continue
+                self.apply_pending()
+
+        self._thread = threading.Thread(
+            target=run, name="rank-updater", daemon=True)
+        self._thread.start()
+
+    def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
+        if self._thread is None:
+            return
+        if drain:
+            deadline = time.time() + timeout
+            while not self._queue.empty() and time.time() < deadline:
+                time.sleep(0.005)
+        self._stop_evt.set()
+        self._thread.join(timeout=timeout)
+        self._thread = None
+        if drain and not self._queue.empty():
+            self.apply_pending()
+
+    # ------------------------------------------------------------------
+    # queries (stable buffer only)
+    # ------------------------------------------------------------------
+    def top_k(self, k: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+        with self._stat_lock:
+            self.queries_served += 1
+        return self._snapshot.top_k(k)
+
+    def scores(self, ids) -> np.ndarray:
+        with self._stat_lock:
+            self.queries_served += 1
+        return self._snapshot.scores(ids)
+
+    def personalized(self, seeds, weights=None, tol: float = 1e-4
+                     ) -> Tuple[np.ndarray, float, UpdateStats]:
+        """Approximate personalized PageRank served against the stable
+        snapshot's frozen graph (push-local; never blocks the updater)."""
+        with self._stat_lock:
+            self.queries_served += 1
+        snap = self._snapshot
+        return ppr_push(snap.view, seeds, weights=weights,
+                        alpha=self.alpha, tol=tol)
+
+    def staleness(self) -> Dict[str, float]:
+        """How far behind the stable buffer is, right now."""
+        snap = self._snapshot
+        return dict(
+            version_lag=float(self.dg.version - snap.version),
+            pending_deltas=float(self._queue.qsize()),
+            age_s=float(time.time() - snap.published_at),
+            cert=float(snap.cert),
+            seq=float(snap.seq),
+        )

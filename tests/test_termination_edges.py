@@ -1,0 +1,99 @@
+"""Fig. 1 termination state machines — edge-case coverage that must run
+even where hypothesis is unavailable (test_termination.py skips wholesale
+without it): DIVERGE-after-CONVERGE persistence resets, pc_max > 1
+behavior on both machines, and STOP racing an in-flight CONVERGE."""
+from repro.core.termination import (CentralizedProtocol, ComputingUEState,
+                                    MonitorState, Msg)
+
+
+def test_diverge_after_converge_resets_pc_with_persistence():
+    """DIVERGE after an announced CONVERGE zeroes pc; re-convergence must
+    then survive a full pc_max streak before re-announcing."""
+    s = ComputingUEState(pc_max=3)
+    m = None
+    for _ in range(3):
+        s, m = s.step(True)
+    assert m == Msg.CONVERGE and s.pc == 3
+    s, m = s.step(False)
+    assert m == Msg.DIVERGE and s.pc == 0 and not s.converged
+    # one or two good checks are not enough again
+    s, m = s.step(True)
+    assert m is None and s.pc == 1
+    # Fig. 1 quirk, preserved faithfully: `converged` flips on the FIRST
+    # good check, so a flicker emits DIVERGE even though CONVERGE was
+    # never announced for this streak (the monitor's recv tolerates it —
+    # the flag it clears is already False).
+    s, m = s.step(False)
+    assert m == Msg.DIVERGE and s.pc == 0
+    s, m = s.step(True)
+    s, m = s.step(True)
+    assert m is None
+    s, m = s.step(True)
+    assert m == Msg.CONVERGE        # full streak restored
+
+
+def test_pc_beyond_pcmax_persists_without_reannouncing():
+    s = ComputingUEState(pc_max=2)
+    msgs = [None] * 6
+    for i in range(6):
+        s, msgs[i] = s.step(True)
+    assert msgs == [None, Msg.CONVERGE, None, None, None, None]
+    assert s.pc == 6 and s.converged    # counter keeps the persistence record
+
+
+def test_monitor_pcmax_persistence_and_diverge_reset():
+    """Monitor-side pc_max > 1: STOP needs pc_max consecutive all-green
+    evaluations; one DIVERGE in between resets the count."""
+    mon = MonitorState.create(2, pc_max=3)
+    mon = mon.recv(0, Msg.CONVERGE)
+    mon = mon.recv(1, Msg.CONVERGE)
+    mon, stop = mon.step()
+    assert not stop and mon.pc == 1
+    mon, stop = mon.step()
+    assert not stop and mon.pc == 2
+    mon = mon.recv(1, Msg.DIVERGE)
+    mon, stop = mon.step()
+    assert not stop and mon.pc == 0 and not mon.converged
+    mon = mon.recv(1, Msg.CONVERGE)
+    for k in range(3):
+        mon, stop = mon.step()
+        assert stop == (k == 2)
+    assert mon.stop_issued
+
+
+def test_stop_races_in_flight_converge():
+    """A CONVERGE that was in flight when STOP was issued must neither
+    re-trigger a stop nor corrupt the monitor; a stopped computing UE
+    likewise ignores late local checks."""
+    mon = MonitorState.create(2, pc_max=1)
+    mon = mon.recv(0, Msg.CONVERGE)
+    mon = mon.recv(1, Msg.CONVERGE)
+    mon, stop = mon.step()
+    assert stop and mon.stop_issued
+    # UE 1 diverged and re-converged while the STOP was on the wire: the
+    # late messages land on a monitor that already issued STOP
+    mon2 = mon.recv(1, Msg.DIVERGE)
+    mon2, stop = mon2.step()
+    assert not stop                     # no second STOP
+    mon2 = mon2.recv(1, Msg.CONVERGE)
+    mon2, stop = mon2.step()
+    assert not stop and mon2.stop_issued
+    # stopped computing UE: step() is a no-op and emits nothing
+    ue = ComputingUEState(pc_max=1).stop()
+    ue2, msg = ue.step(True)
+    assert msg is None and ue2 == ue
+    ue2, msg = ue.step(False)
+    assert msg is None and ue2 == ue
+
+
+def test_protocol_stop_latches_against_late_divergence():
+    """CentralizedProtocol: once STOP is issued, late reports (e.g. an
+    iteration that was already executing) cannot un-stop the system."""
+    proto = CentralizedProtocol(p=2)
+    proto.report(0, True)
+    assert proto.report(1, True)        # STOP
+    assert proto.stopped
+    assert proto.report(0, False)       # late diverge: still stopped
+    assert proto.report(1, True)
+    assert all(s.stopped for s in proto.ues)
+    assert proto.monitor.stop_issued
