@@ -1,0 +1,55 @@
+"""CI gate: fail when the tier-1 suite runtime exceeds 1.25x the PR2
+baseline.
+
+    python benchmarks/check_tier1_runtime.py <measured_seconds_file_or_value>
+
+The baseline lives in benchmarks/results/tier1_runtime_baseline.json
+(seconds measured on the PR2 tree in the reference container).  Because
+absolute runtimes differ across machines, the env var TIER1_BASELINE_S
+overrides the stored baseline — CI jobs on faster/slower runners should
+calibrate once and pin it in the workflow.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+
+BASELINE_FILE = Path(__file__).parent / "results" / \
+    "tier1_runtime_baseline.json"
+MAX_RATIO = 1.25
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    arg = sys.argv[1]
+    measured = float(Path(arg).read_text().strip()
+                     if os.path.exists(arg) else arg)
+
+    env = os.environ.get("TIER1_BASELINE_S")
+    if env:
+        baseline = float(env)
+        source = "TIER1_BASELINE_S"
+    else:
+        rec = json.loads(BASELINE_FILE.read_text())
+        baseline = float(rec["tier1_seconds"])
+        source = f"{BASELINE_FILE.name} ({rec.get('measured_at', '?')})"
+
+    limit = MAX_RATIO * baseline
+    ratio = measured / baseline if baseline > 0 else float("inf")
+    verdict = "OK" if measured <= limit else "FAIL"
+    print(f"tier-1 runtime: {measured:.0f}s vs baseline {baseline:.0f}s "
+          f"[{source}] -> {ratio:.2f}x (limit {MAX_RATIO}x) {verdict}")
+    if measured > limit:
+        print("tier-1 suite slowed beyond the budget — profile the new "
+              "tests or raise the baseline deliberately in "
+              f"{BASELINE_FILE}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

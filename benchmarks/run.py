@@ -3,10 +3,11 @@ beyond-paper studies. Prints ``name,us_per_call,derived`` CSV at the end.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_PRN.json]
 
-Every run (including --quick) starts with the matvec-backend bench and the
-streaming-update bench and writes the machine-readable perf-trajectory file
-(``--out``, default BENCH_PR2.json) at the repo root; --quick then skips
-the slow DES paper-table and SPMD studies.
+Every run (including --quick) starts with the matvec-backend bench, the
+streaming-update bench and the sharded-runtime bench (sparsified vs
+allgather) and writes the machine-readable perf-trajectory file (``--out``,
+default BENCH_PR3.json) at the repo root; --quick then skips the slow DES
+paper-table and SPMD staleness studies.
 """
 from __future__ import annotations
 
@@ -25,7 +26,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR2.json",
+    ap.add_argument("--out", default="BENCH_PR3.json",
                     help="perf-trajectory output (BENCH_PR<N>.json for "
                          "PR N; relative paths land at the repo root)")
     args = ap.parse_args()
@@ -67,6 +68,24 @@ def main() -> None:
         f"{single['speedup_vs_cold']:.0f}x_vs_cold,"
         f"fresh={srec['replay']['fresh_pct']:.0f}%"))
     brec["streaming"] = srec
+
+    print("== Sharded runtime (sparsified vs allgather, 50k) ==")
+    from benchmarks import shard_bench
+    shrec = shard_bench.main()
+    sp = next(r for r in shrec["spmd"] if r["schedule"] == "sparsified")
+    csv_rows.append((
+        "spmd_sparsified",
+        f"{sp['total_comm_bytes']}",
+        f"vs_allgather={sp['vs_allgather']:.2f}x,"
+        f"steps={sp['supersteps']},err={sp['err']:.1e}"))
+    sh = next(r for r in shrec["sharded_stream"]
+              if r["exchange"] == "sparsified")
+    csv_rows.append((
+        "sharded_stream",
+        f"{sh['s'] * 1e6:.0f}",
+        f"path={sh['path']},steps={sh['supersteps']},"
+        f"cert={sh['cert']:.1e},bytes={sh['bytes_moved']}"))
+    brec["sharded"] = shrec
     out_path.write_text(json.dumps(brec, indent=1))
     (RESULTS / "streaming_bench.json").write_text(
         json.dumps(srec, indent=1))

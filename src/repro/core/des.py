@@ -7,13 +7,20 @@ not complete in time, §6), the exact Fig. 1 termination protocol routed
 through latency channels, and import accounting that reproduces the paper's
 Table 2 (completed-imports percentages).
 
-The same engine drives both the PageRank kernels (eq. 6 power form /
-eq. 7 linear form) and, via the generic BlockOperator protocol, the
-stale-gradient training simulation in repro.training.async_dp.
+The substrate-independent pieces live in `repro.runtime`: per-UE state is a
+`runtime.ShardState` (owned fragment + versioned stale views), the block
+update is a `runtime.LocalSolver` (the backend-dispatched
+`BlockLocalSolver` for PageRank, or any object satisfying the protocol —
+e.g. the stale-gradient operator in repro.training.async_dp), message
+targeting is a `runtime.ExchangePlan` (all_to_all / ring / adaptive plus
+the §6 `sparsified` residual-mass targeting), and Fig. 1 is driven by a
+`runtime.TerminationDriver` in its message-passing rendering.  This engine
+owns what is DES-specific: the event queue, the clock and shared-medium
+models, and the Table-2 accounting.
 
 Semantics map (paper -> here):
   UE i owns fragment x_{i}                -> Partition block i
-  x_{j}(tau_j^i(t)) stale imports         -> UE.local_view + version table
+  x_{j}(tau_j^i(t)) stale imports         -> ShardState.view + version table
   compute phase                           -> "iter" events, duration ~ rate_i
   send threads (may be canceled)          -> Channel.send with cancel_window
   CONVERGE/DIVERGE/STOP (Fig. 1)          -> ctrl messages through the medium
@@ -22,87 +29,20 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, Optional, Protocol, Tuple
+from typing import List, Optional
 
 import numpy as np
 
-from .partition import Partition, slice_transition
-from .termination import ComputingUEState, MonitorState, Msg
+from .partition import Partition
+from ..runtime.state import ShardState
+from ..runtime.driver import TerminationDriver
+from ..runtime.exchange import make_plan
+from ..runtime.local import LocalSolver as BlockOperator
+from ..runtime.local import BlockLocalSolver as PageRankBlockOperator
 from ..graph.google import GoogleOperator
 
-
-# --------------------------------------------------------------------------
-# Operator protocol
-# --------------------------------------------------------------------------
-class BlockOperator(Protocol):
-    """f_i of eq. (5): update one fragment from a (stale) full view."""
-
-    def update_block(self, i: int, x_full: np.ndarray) -> np.ndarray: ...
-
-    def block_work(self, i: int) -> float:
-        """Relative compute cost of block i (for the clock model)."""
-        ...
-
-
-def _gcd_block(dim: int, bm: int) -> int:
-    """Largest block edge <= bm that divides dim (scipy BSR needs the
-    blocksize to tile the matrix exactly)."""
-    for b in range(min(bm, max(dim, 1)), 0, -1):
-        if dim % b == 0:
-            return b
-    return 1
-
-
-class PageRankBlockOperator:
-    """Eq. (6) power form (`kind='power'`) or eq. (7) linear form
-    (`kind='linear'`) restricted to rows of a partition block.
-
-    matvec="bsr" stores each block's rows in scipy BSR with (bm, bm) dense
-    blocks — the host-side analogue of the device block-CSR path (faster on
-    site-local graphs, and keeps the DES flavor layout-consistent with the
-    bsr_pallas backend)."""
-
-    def __init__(self, op: GoogleOperator, part: Partition,
-                 kind: str = "power", matvec: str = "csr", bm: int = 32):
-        assert kind in ("power", "linear")
-        assert matvec in ("csr", "bsr")
-        self.op = op
-        self.part = part
-        self.kind = kind
-        self.matvec = matvec
-        self.n = op.n
-        pt_sp = op.to_scipy_pt()
-        v = op.teleport()
-        self._blocks = []
-        for i in range(part.p):
-            s, e = part.block(i)
-            rows = pt_sp[s:e]
-            nnz = pt_sp.indptr[e] - pt_sp.indptr[s]
-            if matvec == "bsr":
-                rows = rows.tobsr(blocksize=(
-                    _gcd_block(e - s, bm), _gcd_block(self.n, bm)))
-            self._blocks.append(dict(
-                pt_rows=rows,                # rows of P^T for this block
-                v=v[s:e],
-                rows=(s, e),
-                nnz=nnz,
-            ))
-        self._dangling = op.pt.dangling
-        self._alpha = op.alpha
-
-    def update_block(self, i: int, x_full: np.ndarray) -> np.ndarray:
-        blk = self._blocks[i]
-        dangling_mass = float(x_full[self._dangling].sum())
-        y = self._alpha * (blk["pt_rows"] @ x_full)
-        y += self._alpha * dangling_mass / self.n
-        if self.kind == "power":
-            y += (1.0 - self._alpha) * float(x_full.sum()) * blk["v"]
-        else:
-            y += (1.0 - self._alpha) * blk["v"]
-        return y
-
-    def block_work(self, i: int) -> float:
-        return float(max(self._blocks[i]["nnz"], 1))
+__all__ = ["AsyncDES", "DESConfig", "AsyncResult", "SyncResult",
+           "BlockOperator", "PageRankBlockOperator"]
 
 
 # --------------------------------------------------------------------------
@@ -147,10 +87,16 @@ class DESConfig:
     rank_stop_tau: float = 0.999
     rank_stop_interval: float = 5.0   # sim seconds between assemblies
     rank_stop_patience: int = 2
-    # --- communication policy ---
+    # --- communication policy (runtime.ExchangePlan) ---
     comm_policy: str = "all_to_all"   # all_to_all | ring | adaptive
+    #                                 # | sparsified (§6 mass targeting)
     adaptive_cancel_limit: int = 3    # consecutive cancels before backoff
     adaptive_max_backoff: int = 16
+    sparsify_thresh: float = 0.0      # L1 mass gate; 0 = auto (= tol)
+    sparsify_refresh_every: int = 8   # forced full send every k local iters
+    sparsify_top_k: Optional[int] = None  # rows per mass-gated payload
+    #                                 # (None = full fragments; forced
+    #                                 # refreshes always ship in full)
     # --- barrier model for the synchronous run ---
     barrier_overhead: float = 5e-3
     # power-form PageRank converges up to scale and is renormalized on
@@ -228,30 +174,36 @@ class AsyncDES:
     def _frag_bytes(self, i: int) -> int:
         return int(self.part.sizes()[i]) * self.cfg.bytes_per_entry
 
+    def _make_plan(self):
+        cfg = self.cfg
+        thresh = cfg.sparsify_thresh if cfg.sparsify_thresh > 0 else cfg.tol
+        return make_plan(cfg.comm_policy, self.p,
+                         cancel_limit=cfg.adaptive_cancel_limit,
+                         max_backoff=cfg.adaptive_max_backoff,
+                         thresh=thresh,
+                         refresh_every=cfg.sparsify_refresh_every,
+                         top_k=cfg.sparsify_top_k)
+
     # -- main loop ----------------------------------------------------------
     def run(self) -> AsyncResult:
         cfg, p, n = self.cfg, self.p, self.n
         part = self.part
 
-        # local views: each UE has a full-length stale copy + version table
-        views = [self.x0.copy() for _ in range(p)]
-        frag_version = np.zeros((p, p), dtype=np.int64)   # [ue, frag] version held
-        produced_version = np.zeros(p, dtype=np.int64)
+        # runtime substrate: per-UE shard state, exchange plan, Fig. 1 driver
+        shards = [ShardState.create(i, part, self.x0) for i in range(p)]
+        plan = self._make_plan()
+        driver = TerminationDriver(p, pc_max_compute=cfg.pc_max_compute,
+                                   pc_max_monitor=cfg.pc_max_monitor)
+
         iters = np.zeros(p, dtype=np.int64)
         local_conv_iter = np.full(p, -1, dtype=np.int64)
         local_conv_time = np.full(p, np.inf)
-        stopped = np.zeros(p, dtype=bool)
         imports = np.zeros((p, p), dtype=np.int64)
         attempts = np.zeros((p, p), dtype=np.int64)
         max_staleness = 0
-
-        ue_states = [ComputingUEState(pc_max=cfg.pc_max_compute)
-                     for _ in range(p)]
-        monitor = MonitorState.create(p, pc_max=cfg.pc_max_monitor)
-
-        # adaptive policy state
-        consec_cancels = np.zeros((p, p), dtype=np.int64)
-        backoff = np.ones((p, p), dtype=np.int64)  # send every `backoff` iters
+        # unsent residual mass per (src, dst) pair (sparsified targeting);
+        # an upper bound on ||frag_now - frag_last_sent||_1 by triangle ineq.
+        pending_mass = np.zeros((p, p), dtype=np.float64)
 
         # message-handling time accrued on each UE's compute thread since its
         # last iteration (serialize on send, deserialize on import)
@@ -299,7 +251,7 @@ class AsyncDES:
             xa = np.empty(n)
             for j in range(p):
                 sj, ej = part.block(j)
-                xa[sj:ej] = views[j][sj:ej]
+                xa[sj:ej] = shards[j].view[sj:ej]
             return xa
 
         while events:
@@ -307,15 +259,16 @@ class AsyncDES:
 
             if kind == "iter":
                 i = payload
-                if stopped[i]:
+                sh = shards[i]
+                if sh.stopped:
                     continue
                 s, e = part.block(i)
-                old_frag = views[i][s:e].copy()
-                new_frag = self.opr.update_block(i, views[i])
-                views[i][s:e] = new_frag
-                iters[i] += 1
-                produced_version[i] += 1
-                frag_version[i, i] = produced_version[i]
+                old_frag = sh.fragment().copy()
+                new_frag = self.opr.update_block(i, sh.view)
+                version = sh.publish(new_frag)
+                iters[i] = sh.iters
+                delta_abs = np.abs(new_frag - old_frag)
+                pending_mass[i, :] += float(delta_abs.sum())
 
                 locally_conv = _resid(new_frag - old_frag, cfg.norm) < cfg.tol
                 if locally_conv and local_conv_iter[i] < 0:
@@ -325,8 +278,8 @@ class AsyncDES:
                     local_conv_iter[i] = -1
                     local_conv_time[i] = np.inf
 
-                # Fig. 1 computing-UE machine
-                ue_states[i], msg = ue_states[i].step(locally_conv)
+                # Fig. 1 computing-UE machine (message rendering)
+                msg = driver.ue_step(i, locally_conv)
                 if msg is not None:
                     send(t, i, -1, "ctrl", msg, cfg.ctrl_bytes)
 
@@ -337,29 +290,40 @@ class AsyncDES:
                     d = int(d)
                     if d == i:
                         continue
-                    if cfg.comm_policy == "ring" and d != (i + 1) % p:
+                    if not plan.wants(i, d, iters[i]):
                         continue
-                    if (cfg.comm_policy == "adaptive"
-                            and iters[i] % backoff[i, d] != 0):
+                    if not plan.gate_mass(i, d, iters[i],
+                                          pending_mass[i, d]):
                         continue
                     attempts[i, d] += 1
+                    # mass-gated sparsified sends ship only the top-k rows
+                    # by this iteration's |delta| ((idx, value) pairs);
+                    # forced refreshes — the bounded-delay guarantee —
+                    # always ship the full fragment
+                    rows_l = None
+                    if not plan.refresh_due(i, d, iters[i]):
+                        rows_l = plan.payload_rows(delta_abs)
+                    if rows_l is None:
+                        nbytes = self._frag_bytes(i)
+                        payload = ("full", new_frag.copy(), version, s, e, i)
+                    else:
+                        nbytes = int(rows_l.size) * (cfg.bytes_per_entry + 4)
+                        payload = ("rows", rows_l + s,
+                                   new_frag[rows_l].copy(), version, i)
                     # serialize cost is paid whether or not the send later
                     # cancels (the buffer is built before the pool submit)
-                    handling[i] += self._frag_bytes(i) * cfg.send_cost_per_byte
-                    ok = send(t, i, d, "data",
-                              (new_frag.copy(), produced_version[i], s, e, i),
-                              self._frag_bytes(i))
-                    if not ok:
-                        consec_cancels[i, d] += 1
-                        if (cfg.comm_policy == "adaptive"
-                                and consec_cancels[i, d] >= cfg.adaptive_cancel_limit):
-                            backoff[i, d] = min(backoff[i, d] * 2,
-                                                cfg.adaptive_max_backoff)
-                            consec_cancels[i, d] = 0
-                    else:
-                        consec_cancels[i, d] = 0
-                        if cfg.comm_policy == "adaptive":
-                            backoff[i, d] = max(1, backoff[i, d] // 2)
+                    handling[i] += nbytes * cfg.send_cost_per_byte
+                    ok = send(t, i, d, "data", payload, nbytes)
+                    plan.on_result(i, d, ok)
+                    if ok:
+                        plan.note_sent(i, d, iters[i], full=rows_l is None)
+                        if rows_l is None:
+                            pending_mass[i, d] = 0.0
+                        else:
+                            # only the shipped rows' mass was communicated
+                            pending_mass[i, d] = max(
+                                0.0, pending_mass[i, d]
+                                - float(delta_abs[rows_l].sum()))
 
                 if iters[i] < cfg.max_iters:
                     dur = (self._iter_duration(i) + cfg.iter_overhead
@@ -370,25 +334,38 @@ class AsyncDES:
             elif kind == "data":
                 # version bookkeeping is keyed by the fragment OWNER (ring
                 # relays deliver fragments the message sender does not own)
-                src, dst, (frag, version, s, e, owner) = payload
-                if stopped[dst]:
+                src, dst, body = payload
+                sh = shards[dst]
+                if sh.stopped:
                     continue
-                if version > frag_version[dst, owner]:
-                    lag = int(produced_version[owner] - version)
+                if body[0] == "rows":
+                    # sparsified partial payload: refresh only the shipped
+                    # rows (the plan's forced full refresh bounds how long
+                    # the others stay stale)
+                    _, rows_g, vals, version, owner = body
+                    if sh.import_rows(owner, rows_g, vals, version):
+                        lag = int(shards[owner].produced - version)
+                        max_staleness = max(max_staleness, lag)
+                        imports[dst, owner] += 1
+                        handling[dst] += rows_g.size \
+                            * (cfg.bytes_per_entry + 4) \
+                            * cfg.recv_cost_per_byte
+                    continue
+                _, frag, version, s, e, owner = body
+                if sh.import_fragment(owner, frag, version, s, e):
+                    lag = int(shards[owner].produced - version)
                     max_staleness = max(max_staleness, lag)
-                    views[dst][s:e] = frag
-                    frag_version[dst, owner] = version
                     imports[dst, owner] += 1
                     handling[dst] += (e - s) * cfg.bytes_per_entry \
                         * cfg.recv_cost_per_byte
                     # Ring relay: a freshly-accepted fragment is forwarded one
                     # hop, so each version circulates the ring once (<= p-1
                     # hops) and staleness stays O(p) without all-to-all sends.
-                    if cfg.comm_policy == "ring":
+                    if plan.name == "ring":
                         nxt = (dst + 1) % p
                         if nxt != owner:
                             send(t, dst, nxt, "data",
-                                 (frag.copy(), version, s, e, owner),
+                                 ("full", frag.copy(), version, s, e, owner),
                                  self._frag_bytes(owner))
 
             elif kind == "assemble":
@@ -416,8 +393,7 @@ class AsyncDES:
 
             elif kind == "ctrl":
                 src, _, msg = payload
-                monitor = monitor.recv(src, msg)
-                monitor, issue_stop = monitor.step()
+                issue_stop = driver.monitor_recv(src, msg)
                 if issue_stop and not pending_stop_sent:
                     pending_stop_sent = True
                     for d in range(p):
@@ -425,9 +401,9 @@ class AsyncDES:
 
             elif kind == "stop":
                 _, d, _ = payload
-                stopped[d] = True
-                ue_states[d] = ue_states[d].stop()
-                if bool(stopped.all()):
+                shards[d].stopped = True
+                driver.stop_shard(d)
+                if all(sh.stopped for sh in shards):
                     stop_time = t
                     break
 
@@ -435,7 +411,7 @@ class AsyncDES:
         x = np.empty(n, dtype=np.float64)
         for i in range(p):
             s, e = part.block(i)
-            x[s:e] = views[i][s:e]
+            x[s:e] = shards[i].view[s:e]
         norm1 = x.sum()
         if self.cfg.normalize and norm1 > 0:
             x_assembled = x / norm1  # power form converges up to scale [21]

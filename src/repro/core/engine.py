@@ -7,6 +7,10 @@ One object, three execution flavors:
                   (heterogeneous UEs, Fig. 1 termination, import accounting).
   solve_spmd()  : TPU-native bounded-staleness shard_map iteration with
                   sparsified collective schedules (the deployable form).
+
+All three render the same substrate-independent cycle — ShardState /
+LocalSolver / ExchangePlan / TerminationDriver — factored into
+repro.runtime (see docs/runtime.md).
 """
 from __future__ import annotations
 

@@ -8,7 +8,9 @@ communication schemes ... the flexibility of asynchronous iterations gives
 us a choice on the targets of produced messages" (§6).
 
 We therefore express asynchrony as bounded staleness over sparsified
-collective schedules:
+collective schedules.  The schedules are the bulk-synchronous rendering of
+`runtime.ExchangePlan` (see runtime/exchange.py — the host rendering drives
+the DES engine and the sharded streaming updater):
 
   schedule="allgather"    : all-gather every superstep (synchronous baseline,
                             eq. 4 distributed).
@@ -18,6 +20,12 @@ collective schedules:
                             shard refreshes exactly one peer fragment per
                             step (1/p of the all-gather bytes; staleness of
                             fragment j at shard i is (i - j) mod p steps).
+  schedule="sparsified"   : the §6 message-targeting plan — each shard ships
+                            only the top-k rows whose |delta| since the last
+                            send exceeds a threshold, as (idx, value) pairs;
+                            payloads shrink as shards converge, and a forced
+                            full all-gather every `sparsify_refresh_every`
+                            supersteps keeps delays bounded.
   delivery_prob < 1       : models canceled/dropped messages (paper cancels
                             overdue send threads); a rejected delivery keeps
                             the stale copy, exactly like eq. (5) with larger
@@ -29,16 +37,24 @@ slice) or "bsr_pallas" (each UE packs its own block-row slice of P^T into
 the hub-split BSR layout once, then every superstep is dense block
 multiplies + a small segment-sum side path — the MXU form on TPU).
 
+The teleport may be an (n, nv) stack: nv personalized PageRank lanes share
+every operator load, with per-lane Fig. 1 termination counters.  With
+``freeze_lanes=True`` a lane whose all-reduced monitor counter has fired is
+frozen (its fragment stops updating — the multi-lane rendering of the
+per-lane freezing in core.pagerank), so finished lanes stop perturbing the
+exchange while slow lanes run to their own tolerance.
+
 Convergence for all schedules follows from bounded delays (Frommer-Szyld
-[15]; Lubachevsky-Mitra [21] for the unit-spectral-radius power form).
-Termination detection runs in-loop: per-shard persistence counters plus a
-monitor counter over the all-reduced convergence bits — the bulk-synchronous
-rendering of Fig. 1.
+[15]; Lubachevsky-Mitra [21] for the unit-spectral-radius power form; the
+sparsified plan's forced refresh is exactly the bounded-delay condition).
+Termination detection runs in-loop through
+`runtime.TerminationDriver.bits_step` — per-shard persistence counters plus
+a monitor counter over the all-reduced convergence bits, the
+bulk-synchronous rendering of Fig. 1.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import numpy as np
@@ -48,13 +64,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .partition import Partition, block_rows
+from ..runtime.driver import TerminationDriver
+from ..runtime.exchange import spmd_exchange
 from ..graph.google import GoogleOperator
 
 
 @dataclasses.dataclass
 class SPMDConfig:
     p: int                       # number of UEs = mesh size along 'ue'
-    schedule: str = "allgather"  # allgather | allgather_k | ring
+    schedule: str = "allgather"  # allgather | allgather_k | ring | sparsified
     sync_every: int = 4          # k for allgather_k
     delivery_prob: float = 1.0   # per-fragment acceptance probability
     tol: float = 1e-6            # local convergence threshold (inf-norm)
@@ -68,14 +86,23 @@ class SPMDConfig:
     bsr_bm: int = 0               # block edge; 0 = auto (128 TPU / 8 CPU)
     bsr_impl: str = "auto"        # auto | pallas | interpret | ref
     hub_quantile: float = 0.99    # rows above this row-nnz quantile -> COO
+    freeze_lanes: bool = False    # freeze lanes whose monitor counter fired
+    # --- sparsified schedule (runtime.ExchangePlan, §6 targeting) ---
+    sparsify_k: int = 0           # max rows per payload; 0 = auto (bsize/8)
+    sparsify_thresh: float = 0.0  # per-row |delta| floor (0 = any change)
+    sparsify_refresh_every: int = 16  # forced full all-gather cadence
 
 
 @dataclasses.dataclass
 class SPMDResult:
-    x: np.ndarray
+    x: np.ndarray                # (n,) — or (n, nv) for teleport stacks
     supersteps: int
     local_resid: np.ndarray      # (p,) final per-shard residuals
+                                 # ((p, nv) for teleport stacks)
     comm_bytes_per_step: int     # payload bytes moved per superstep (model)
+    comm_bytes_total: int = 0    # payload bytes over the whole run (model)
+    rows_sent: int = 0           # sparsified: sparse payload rows shipped
+    lane_supersteps: Optional[np.ndarray] = None  # (nv,) first-done step
 
 
 def _hash_uniform(seed: int, step: jax.Array, lane: jax.Array) -> jax.Array:
@@ -102,7 +129,7 @@ def _resolve_bsr(cfg: SPMDConfig) -> Tuple[int, str]:
 
 
 def _pack_blocks(op: GoogleOperator, part: Partition, dtype,
-                 cfg: SPMDConfig):
+                 cfg: SPMDConfig, v_stack: np.ndarray):
     """Pad per-block state of P^T to common budgets so the sharded arrays
     have static shapes.
 
@@ -111,12 +138,14 @@ def _pack_blocks(op: GoogleOperator, part: Partition, dtype,
                  quantile over all pages) splits each shard's edges; the
                  block-CSR parts share one K budget, the COO hub parts one
                  edge budget.
-    Always packed: per-shard teleport fragments and a valid-row mask (the
-    scalar dangling/teleport corrections must not leak into padding rows).
+    Always packed: per-shard teleport fragments ((bsize, nv) lanes) and a
+    valid-row mask (the scalar dangling/teleport corrections must not leak
+    into padding rows).
     """
     from .partition import slice_transition
 
     p = part.p
+    nv = v_stack.shape[1]
     bsize = int(part.sizes().max())
     if cfg.backend == "bsr_pallas":
         bm, _ = _resolve_bsr(cfg)
@@ -125,12 +154,11 @@ def _pack_blocks(op: GoogleOperator, part: Partition, dtype,
     n_pad = p * bsize
 
     blocks = [slice_transition(op.pt, part, i) for i in range(p)]
-    v = op.teleport()
-    vblk = np.zeros((p, bsize), dtype=dtype)
+    vblk = np.zeros((p, bsize, nv), dtype=dtype)
     valid = np.zeros((p, bsize), dtype=dtype)
     for i in range(p):
         s, t = part.block(i)
-        vblk[i, : t - s] = v[s:t]
+        vblk[i, : t - s] = v_stack[s:t]
         valid[i, : t - s] = 1.0
     # the dangling mask lives in *packed-view* coordinates: with
     # block-aligned fragments the view rows shift relative to page ids
@@ -228,7 +256,8 @@ def col_map_seg(part: Partition, bsize: int, cols: np.ndarray) -> np.ndarray:
 
 
 def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
-               mesh: Optional[Mesh] = None) -> SPMDResult:
+               mesh: Optional[Mesh] = None,
+               v: Optional[np.ndarray] = None) -> SPMDResult:
     p = cfg.p
     n = op.n
     dtype = jnp.dtype(cfg.dtype)
@@ -237,9 +266,18 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
         assert len(devs) >= p, f"need {p} devices, have {len(devs)}"
         mesh = jax.make_mesh((p,), ("ue",), devices=devs[:p])
 
+    v_stack = np.asarray(op.teleport() if v is None else v,
+                         dtype=np.float64)
+    if v_stack.ndim == 1:
+        v_stack = v_stack[:, None]
+    if v_stack.shape[0] != n:
+        raise ValueError(f"teleport v has {v_stack.shape[0]} rows, "
+                         f"operator has {n}")
+    nv = v_stack.shape[1]
+
     # uniform blocks (paper's ceil(n/p) scheme) padded to p * bsize
     part = block_rows(n, p)
-    packed = _pack_blocks(op, part, np.dtype(cfg.dtype), cfg)
+    packed = _pack_blocks(op, part, np.dtype(cfg.dtype), cfg, v_stack)
     bsize = packed["bsize"]
     n_pad = packed["n_pad"]
 
@@ -252,15 +290,21 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
     if use_bsr:
         bm, bsr_impl = _resolve_bsr(cfg)
 
+    init_comm, comm = spmd_exchange(
+        cfg.schedule, p=p, bsize=bsize, n_pad=n_pad,
+        sync_every=cfg.sync_every, sparsify_k=cfg.sparsify_k,
+        sparsify_row_thresh=cfg.sparsify_thresh,
+        sparsify_refresh_every=cfg.sparsify_refresh_every)
+
     # device inputs, sharded over 'ue'
     sh = lambda *spec: jax.NamedSharding(mesh, P(*spec))
-    vblk = jax.device_put(packed["vblk"], sh("ue", None))
+    vblk = jax.device_put(packed["vblk"], sh("ue", None, None))
     valid = jax.device_put(packed["valid"], sh("ue", None))
     dang = jax.device_put(
         np.broadcast_to(packed["dang"], (p, n_pad)).copy(), sh("ue", None))
-    x0_blocks = (np.full((p, bsize), 1.0 / n, dtype=cfg.dtype)
-                 * packed["valid"].astype(cfg.dtype))
-    x0 = jax.device_put(x0_blocks, sh("ue", None))
+    x0_blocks = (np.full((p, bsize, nv), 1.0 / n, dtype=cfg.dtype)
+                 * packed["valid"].astype(cfg.dtype)[:, :, None])
+    x0 = jax.device_put(x0_blocks, sh("ue", None, None))
 
     if use_bsr:
         op_args = tuple(jax.device_put(packed[k], sh("ue", *([None] * nd)))
@@ -271,8 +315,9 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
                         for k in ("src", "wgt", "rid"))
 
     def body_fn(vblk, valid, dang, x0, *op_args):
-        """Runs on one shard. vblk/valid/x0: (1, bsize), dang: (1, n_pad);
-        op_args are the shard's operator slice (edge or block form)."""
+        """Runs on one shard. vblk/x0: (1, bsize, nv), valid: (1, bsize),
+        dang: (1, n_pad); op_args are the shard's operator slice (edge or
+        block form)."""
         vb_, val_, dg_, myx = vblk[0], valid[0], dang[0], x0[0]
         i = jax.lax.axis_index("ue")
 
@@ -281,120 +326,127 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
             blk_, bcols_, hrow_, hcol_, hval_ = (a[0] for a in op_args)
 
             def pt_apply(view):
-                xb = view.astype(jnp.float32).reshape(n_pad // bm, bm, 1)
+                xb = view.astype(jnp.float32).reshape(n_pad // bm, bm, nv)
                 y = bsr_matvec(blk_, bcols_, xb, impl=bsr_impl)
                 hub = jax.ops.segment_sum(
-                    hval_ * view.astype(jnp.float32)[hcol_], hrow_,
+                    hval_[:, None] * view.astype(jnp.float32)[hcol_], hrow_,
                     num_segments=bsize)
-                return (y.reshape(bsize) + hub).astype(view.dtype)
+                return (y.reshape(bsize, nv) + hub).astype(view.dtype)
         else:
             src_, wgt_, rid_ = (a[0] for a in op_args)
 
             def pt_apply(view):
-                contrib = wgt_ * view[src_]
+                contrib = wgt_[:, None] * view[src_]
                 return jax.ops.segment_sum(contrib, rid_,
                                            num_segments=bsize)
 
         def local_update(view):
-            """f_i: new own fragment from the (stale) full view. The scalar
-            dangling/teleport corrections are masked so the block-aligned
-            padding rows stay exactly zero."""
+            """f_i: new own fragment from the (stale) full view — per lane.
+            The scalar dangling/teleport corrections are masked so the
+            block-aligned padding rows stay exactly zero."""
             y = alpha * pt_apply(view)
-            dmass = jnp.sum(jnp.where(dg_, view, 0.0))
-            y = y + alpha * dmass / n * val_
+            dmass = jnp.sum(jnp.where(dg_[:, None], view, 0.0), axis=0)
+            y = y + alpha * dmass[None, :] / n * val_[:, None]
             if linear:
                 y = y + (1.0 - alpha) * vb_
             else:
-                y = y + (1.0 - alpha) * jnp.sum(view) * vb_
-            return y * val_
-
-        perm = [(j, (j + 1) % p) for j in range(p)]
+                y = y + (1.0 - alpha) * jnp.sum(view, axis=0)[None, :] * vb_
+            return y * val_[:, None]
 
         def superstep(carry):
-            view, frag, ring, step, pc, mon_pc, done = carry
+            (view, frag, comm_state, step, pc, mon_pc, lane_done,
+             lane_step, rows_sent, fulls) = carry
             newfrag = local_update(view)
-            resid = jnp.max(jnp.abs(newfrag - frag))
+            if cfg.freeze_lanes:
+                # frozen lanes keep their fragment — the monitor already
+                # observed persistent global convergence for them
+                newfrag = jnp.where(lane_done[None, :], frag, newfrag)
+            resid = jnp.max(jnp.abs(newfrag - frag), axis=0)   # (nv,)
 
-            # ---- communication -------------------------------------------
+            # ---- communication (ExchangePlan, bulk-sync rendering) -------
             accept = _hash_uniform(seed, step, i) < q
+            view, comm_state, nsent, nfull = comm(
+                i, view, newfrag, comm_state, step, accept)
 
-            if cfg.schedule == "ring" and p > 1:
-                ring_in = jax.lax.ppermute(ring, "ue", perm)
-                # at superstep s (0-based), incoming fragment belongs to
-                # UE (i - s - 1) mod p
-                owner = jnp.mod(i - step - 1, p)
-                # my own slot must always hold the fresh fragment
-                view = jax.lax.dynamic_update_slice(
-                    view, newfrag, (i * bsize,))
-                updated = jax.lax.dynamic_update_slice(
-                    view, ring_in, (owner * bsize,))
-                view = jnp.where(
-                    jnp.logical_and(accept, owner != i), updated, view)
-                # forward own fragment afresh every p steps, else relay
-                restart = jnp.mod(step + 1, p) == 0
-                ring = jnp.where(restart, newfrag, ring_in)
-            elif cfg.schedule == "allgather_k":
-                do_sync = jnp.mod(step, cfg.sync_every) == cfg.sync_every - 1
-                def gather(_):
-                    allv = jax.lax.all_gather(newfrag, "ue")  # (p, bsize)
-                    return allv.reshape(n_pad)
-                def keep(_):
-                    return jax.lax.dynamic_update_slice(
-                        view, newfrag, (i * bsize,))
-                sync_ok = jnp.logical_and(do_sync, accept)
-                view = jax.lax.cond(sync_ok, gather, keep, operand=None)
-            else:  # allgather (synchronous baseline)
-                allv = jax.lax.all_gather(newfrag, "ue")
-                view = allv.reshape(n_pad)
-
-            # ---- in-loop Fig. 1 protocol ----------------------------------
-            locally_conv = resid < tol
-            pc = jnp.where(locally_conv, pc + 1, 0)
-            flag = pc >= cfg.pc_max_compute
-            nconv = jax.lax.psum(flag.astype(jnp.int32), "ue")
-            all_conv = nconv == p
-            mon_pc = jnp.where(all_conv, mon_pc + 1, 0)
-            done = mon_pc >= cfg.pc_max_monitor
-            return view, newfrag, ring, step + 1, pc, mon_pc, done
+            # ---- in-loop Fig. 1 protocol (all-reduced bits) --------------
+            pc, mon_pc, done_now = TerminationDriver.bits_step(
+                resid < tol, pc, mon_pc, p=p,
+                pc_max_compute=cfg.pc_max_compute,
+                pc_max_monitor=cfg.pc_max_monitor,
+                psum=lambda a: jax.lax.psum(a, "ue"))
+            lane_step = jnp.where(done_now & (lane_step < 0),
+                                  step + 1, lane_step)
+            return (view, newfrag, comm_state, step + 1, pc, mon_pc,
+                    done_now, lane_step, rows_sent + nsent, fulls + nfull)
 
         def cond(carry):
-            *_, step, pc, mon_pc, done = carry
-            return jnp.logical_and(~done, step < cfg.max_supersteps)
+            _, _, _, step, _, _, lane_done, *_ = carry
+            return jnp.logical_and(~jnp.all(lane_done),
+                                   step < cfg.max_supersteps)
 
-        view0 = jax.lax.all_gather(myx, "ue").reshape(n_pad)
-        carry = (view0, myx, myx, jnp.asarray(0), jnp.asarray(0),
-                 jnp.asarray(0), jnp.asarray(False))
-        view, frag, ring, step, pc, mon_pc, done = jax.lax.while_loop(
+        view0 = jax.lax.all_gather(myx, "ue").reshape(n_pad, nv)
+        carry = (view0, myx, init_comm(myx), jnp.asarray(0),
+                 jnp.zeros(nv, jnp.int32), jnp.zeros(nv, jnp.int32),
+                 jnp.zeros(nv, bool), jnp.full(nv, -1, jnp.int32),
+                 jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+        (view, frag, _, step, pc, mon_pc, lane_done, lane_step,
+         rows_sent, fulls) = jax.lax.while_loop(
             cond, lambda c: superstep(c), carry)
-        resid = jnp.max(jnp.abs(local_update(view) - frag))
-        return frag[None], step[None], resid[None]
+        resid = jnp.max(jnp.abs(local_update(view) - frag), axis=0)
+        return (frag[None], step[None], resid[None], lane_step[None],
+                rows_sent[None], fulls[None])
 
     mapped = shard_map(
         body_fn, mesh=mesh,
-        in_specs=(P("ue", None),) * 4
+        in_specs=(P("ue", None, None), P("ue", None), P("ue", None),
+                  P("ue", None, None))
         + tuple(P("ue", *([None] * (a.ndim - 1))) for a in op_args),
-        out_specs=(P("ue", None), P("ue"), P("ue")),
+        out_specs=(P("ue", None, None), P("ue"), P("ue", None),
+                   P("ue", None), P("ue"), P("ue")),
         check_rep=False,
     )
-    frags, steps, resids = jax.jit(mapped)(vblk, valid, dang, x0, *op_args)
+    frags, steps, resids, lane_steps, rows_sent, fulls = \
+        jax.jit(mapped)(vblk, valid, dang, x0, *op_args)
 
     # un-pack: drop each fragment's block-alignment padding
-    frag_mat = np.asarray(frags, dtype=np.float64)
-    x = np.empty(n, dtype=np.float64)
+    frag_mat = np.asarray(frags, dtype=np.float64)      # (p, bsize, nv)
+    x = np.empty((n, nv), dtype=np.float64)
     for i in range(p):
         s, t = part.block(i)
         x[s:t] = frag_mat[i, : t - s]
-    s_ = x.sum()
-    if s_ > 0:
-        x = x / s_
+    s_ = x.sum(axis=0)
+    x = np.where(s_ > 0, x / np.where(s_ > 0, s_, 1.0), x)
 
+    supersteps = int(steps.max())
     frag_bytes = bsize * np.dtype(cfg.dtype).itemsize
     if cfg.schedule == "ring":
-        comm = p * frag_bytes                      # one permute stage
+        comm_step = p * frag_bytes * nv                # one permute stage
+        comm_total = comm_step * supersteps
     elif cfg.schedule == "allgather_k":
-        comm = p * (p - 1) * frag_bytes // cfg.sync_every
+        comm_step = p * (p - 1) * frag_bytes * nv // cfg.sync_every
+        comm_total = comm_step * supersteps
+    elif cfg.schedule == "sparsified":
+        # honest accounting from in-loop counters: (idx, value-lanes) pairs
+        # to p-1 peers per sparse payload row, plus the forced full
+        # refreshes (each due step is one full all-gather)
+        entry = 4 + np.dtype(cfg.dtype).itemsize * nv
+        rows_total = int(np.asarray(rows_sent).sum())
+        fulls_total = int(np.asarray(fulls).sum())      # p per due step
+        comm_total = (rows_total * (p - 1) * entry
+                      + fulls_total * (p - 1) * frag_bytes * nv)
+        comm_step = comm_total // max(supersteps, 1)
     else:
-        comm = p * (p - 1) * frag_bytes            # full all-gather
-    return SPMDResult(x=x, supersteps=int(steps.max()),
-                      local_resid=np.asarray(resids),
-                      comm_bytes_per_step=int(comm))
+        comm_step = p * (p - 1) * frag_bytes * nv      # full all-gather
+        comm_total = comm_step * supersteps
+
+    resid_out = np.asarray(resids)                      # (p, nv)
+    lane_out = np.asarray(lane_steps, dtype=np.int64).max(axis=0)  # (nv,)
+    if nv == 1:
+        x = x[:, 0]
+        resid_out = resid_out[:, 0]
+    return SPMDResult(x=x, supersteps=supersteps,
+                      local_resid=resid_out,
+                      comm_bytes_per_step=int(comm_step),
+                      comm_bytes_total=int(comm_total),
+                      rows_sent=int(np.asarray(rows_sent).sum()),
+                      lane_supersteps=lane_out if nv > 1 else None)

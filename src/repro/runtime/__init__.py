@@ -1,0 +1,35 @@
+"""Shard runtime — the substrate-independent core of the paper's
+asynchronous iteration (see docs/runtime.md).
+
+The paper's cycle — local fragment updates over stale views (eq. 5),
+flexible message targeting (§6), and the Fig. 1 termination protocol — is
+independent of the execution substrate.  This package factors it out of the
+three substrates that used to hand-roll it (`core.des`, `core.spmd`,
+`streaming`):
+
+  state    — ShardState: one shard's owned fragment + versioned stale views.
+  local    — LocalSolver protocol + the backend-dispatched block update
+             (eq. 6/7 restricted to a partition block) every substrate
+             shares.
+  exchange — ExchangePlan: who messages whom, when, and with what fragment
+             subset.  Covers all_to_all / ring / adaptive / allgather_k and
+             the §6 `sparsified` plan (residual-mass targeting + top-k row
+             payloads), in both the host/event rendering (DES, streaming)
+             and the bulk-synchronous jax rendering (SPMD shard_map).
+  driver   — TerminationDriver: drives the pure Fig. 1 machines
+             (core.termination) in the message-passing, all-reduced-value,
+             and all-reduced-bit renderings.
+"""
+from .state import ShardState
+from .local import LocalSolver, BlockLocalSolver
+from .exchange import (ExchangePlan, AllToAllPlan, RingPlan, AdaptivePlan,
+                       SparsifiedPlan, make_plan, spmd_exchange)
+from .driver import TerminationDriver
+
+__all__ = [
+    "ShardState",
+    "LocalSolver", "BlockLocalSolver",
+    "ExchangePlan", "AllToAllPlan", "RingPlan", "AdaptivePlan",
+    "SparsifiedPlan", "make_plan", "spmd_exchange",
+    "TerminationDriver",
+]

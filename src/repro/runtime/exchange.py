@@ -1,0 +1,321 @@
+"""ExchangePlan — who messages whom, when, with what fragment subset.
+
+The paper's §6 observation is that asynchronous iterations leave "a choice
+on the targets of produced messages".  An ExchangePlan encodes that choice
+once, in two renderings:
+
+  host/event rendering (DES engine, sharded streaming updater)
+      `wants(i, d, it)`      — topology/cadence gate: does shard i message
+                               peer d after its it-th local update?
+      `gate_mass(i, d, it, mass)` — §6 residual-mass gate: is the payload
+                               worth sending right now?  A forced full
+                               refresh every `refresh_every` local updates
+                               keeps delays bounded (Frommer-Szyld
+                               convergence needs every fragment refreshed
+                               within a finite window).
+      `payload_rows(delta_abs)` — optional top-k row selection so payloads
+                               shrink as the sender converges.
+      `on_result(i, d, ok)`  — feedback (delivered / canceled), used by the
+                               adaptive backoff policy.
+
+  bulk-synchronous rendering (SPMD shard_map) — `spmd_exchange` returns the
+      (init_state, comm_step) pair for the jax while_loop: allgather,
+      allgather_k, ring (collective_permute relay), and sparsified (top-k
+      rows by |delta| above a residual threshold, all-gathered as (idx,
+      val) pairs, with the same forced-full-refresh bound).
+
+Both renderings of `sparsified` satisfy the bounded-delay condition by
+construction: whatever the threshold, shard d's copy of fragment i is
+refreshed in full at least every `refresh_every` sender updates (property-
+tested in tests/test_runtime.py).  In the SPMD rendering the forced
+refresh bypasses the delivery-drop gate (it models a reliable
+synchronization epoch), so the bound holds for any delivery_prob; sparse
+payloads between refreshes may still drop.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# host/event rendering
+# ---------------------------------------------------------------------------
+class ExchangePlan:
+    """Base plan: all-to-all every local update, full fragments."""
+
+    name = "all_to_all"
+
+    def __init__(self, p: int):
+        self.p = p
+
+    def wants(self, i: int, d: int, it: int) -> bool:
+        """Topology/cadence gate for a message i -> d after i's it-th local
+        update (callers have already excluded d == i)."""
+        return True
+
+    def gate_mass(self, i: int, d: int, it: int, mass: float) -> bool:
+        """Residual-mass gate (§6): True = send now. Default sends always."""
+        return True
+
+    def refresh_due(self, i: int, d: int, it: int) -> bool:
+        """True when the payload i -> d must ship as a *full* fragment
+        (engines skip `payload_rows` then).  Plans without partial payloads
+        always ship full."""
+        return True
+
+    def payload_rows(self, delta_abs: np.ndarray) -> Optional[np.ndarray]:
+        """Local row ids to include in the payload (None = full fragment)."""
+        return None
+
+    def on_result(self, i: int, d: int, ok: bool) -> None:
+        """Feedback: the send was delivered (ok) or canceled (not ok)."""
+
+    def note_sent(self, i: int, d: int, it: int, full: bool = True) -> None:
+        """Bookkeeping hook: a payload for d actually left shard i."""
+
+
+class AllToAllPlan(ExchangePlan):
+    pass
+
+
+class RingPlan(ExchangePlan):
+    """Each shard messages only its successor; receivers relay accepted
+    fragments one hop (the engine owns the relay — versions circulate the
+    ring in <= p-1 hops, so staleness stays O(p))."""
+
+    name = "ring"
+
+    def wants(self, i: int, d: int, it: int) -> bool:
+        return d == (i + 1) % self.p
+
+
+class AdaptivePlan(ExchangePlan):
+    """Cancel-feedback backoff: consecutive canceled sends to a peer double
+    that peer's send period (up to max_backoff); a delivered send halves
+    it.  This is the DES comm_policy="adaptive" behavior, verbatim."""
+
+    name = "adaptive"
+
+    def __init__(self, p: int, cancel_limit: int = 3, max_backoff: int = 16):
+        super().__init__(p)
+        self.cancel_limit = cancel_limit
+        self.max_backoff = max_backoff
+        self.consec_cancels = np.zeros((p, p), dtype=np.int64)
+        self.backoff = np.ones((p, p), dtype=np.int64)
+
+    def wants(self, i: int, d: int, it: int) -> bool:
+        return it % self.backoff[i, d] == 0
+
+    def on_result(self, i: int, d: int, ok: bool) -> None:
+        if ok:
+            self.consec_cancels[i, d] = 0
+            self.backoff[i, d] = max(1, self.backoff[i, d] // 2)
+        else:
+            self.consec_cancels[i, d] += 1
+            if self.consec_cancels[i, d] >= self.cancel_limit:
+                self.backoff[i, d] = min(self.backoff[i, d] * 2,
+                                         self.max_backoff)
+                self.consec_cancels[i, d] = 0
+
+
+class SparsifiedPlan(ExchangePlan):
+    """§6 message targeting: send to a peer only when the sender-side
+    residual mass (||delta||_1 since the last send to that peer) exceeds
+    `thresh`, with a forced full refresh every `refresh_every` local
+    updates so delays stay bounded; `payload_rows` keeps only the top-k
+    rows by |delta|, so payloads shrink as the sender converges."""
+
+    name = "sparsified"
+
+    def __init__(self, p: int, thresh: float, refresh_every: int = 8,
+                 top_k: Optional[int] = None):
+        super().__init__(p)
+        assert refresh_every >= 1
+        self.thresh = float(thresh)
+        self.refresh_every = int(refresh_every)
+        self.top_k = top_k
+        # iteration of the last *full* send per (src, dst) pair
+        self.last_full = np.zeros((p, p), dtype=np.int64)
+
+    def refresh_due(self, i: int, d: int, it: int) -> bool:
+        return it - self.last_full[i, d] >= self.refresh_every
+
+    def gate_mass(self, i: int, d: int, it: int, mass: float) -> bool:
+        return mass > self.thresh or self.refresh_due(i, d, it)
+
+    def payload_rows(self, delta_abs: np.ndarray) -> Optional[np.ndarray]:
+        if self.top_k is None or self.top_k >= delta_abs.size:
+            return None
+        idx = np.argpartition(-delta_abs, self.top_k - 1)[: self.top_k]
+        return np.sort(idx)
+
+    def note_sent(self, i: int, d: int, it: int, full: bool = True) -> None:
+        if full:
+            self.last_full[i, d] = it
+
+
+def make_plan(policy: str, p: int, *, cancel_limit: int = 3,
+              max_backoff: int = 16, thresh: float = 0.0,
+              refresh_every: int = 8,
+              top_k: Optional[int] = None) -> ExchangePlan:
+    """Plan factory keyed by the DES comm_policy names."""
+    if policy == "all_to_all":
+        return AllToAllPlan(p)
+    if policy == "ring":
+        return RingPlan(p)
+    if policy == "adaptive":
+        return AdaptivePlan(p, cancel_limit=cancel_limit,
+                            max_backoff=max_backoff)
+    if policy == "sparsified":
+        return SparsifiedPlan(p, thresh=thresh, refresh_every=refresh_every,
+                              top_k=top_k)
+    raise ValueError(f"unknown exchange policy {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# bulk-synchronous rendering (SPMD shard_map)
+# ---------------------------------------------------------------------------
+SPMD_SCHEDULES = ("allgather", "allgather_k", "ring", "sparsified")
+
+
+def spmd_exchange(schedule: str, *, p: int, bsize: int, n_pad: int,
+                  sync_every: int = 4, sparsify_k: int = 0,
+                  sparsify_row_thresh: float = 0.0,
+                  sparsify_refresh_every: int = 16):
+    """Build the jax rendering of an ExchangePlan for one shard_map loop.
+
+    Returns ``(init_state, comm)``:
+
+      init_state(myfrag) -> comm_state pytree carried through the loop
+          (ring: the relay buffer; sparsified: the last-sent fragment;
+          otherwise an empty tuple);
+      comm(i, view, newfrag, comm_state, step, accept)
+          -> (view, comm_state, rows_sent, full_sent)
+          where `view` is the (n_pad, nv) stale view after this superstep's
+          exchange, `rows_sent` counts sparse payload rows this shard
+          shipped (0 for the dense schedules — their byte model is static),
+          and `full_sent` is 1 when a full-fragment refresh happened.
+
+    All functions are traced inside shard_map: `i` is the shard's axis
+    index, `accept` the per-shard delivery draw, and collectives run on the
+    "ue" axis.  The sparsified plan mirrors the host rendering: top-k rows
+    by per-row |delta| (summed over lanes) above `sparsify_row_thresh`,
+    all-gathered as (idx, val) pairs, plus a forced full all-gather every
+    `sparsify_refresh_every` supersteps (the bounded-delay guarantee).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if schedule not in SPMD_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{SPMD_SCHEDULES}")
+
+    zero = jnp.asarray(0, dtype=jnp.int32)
+    one = jnp.asarray(1, dtype=jnp.int32)
+
+    def place_own(view, newfrag, i):
+        return jax.lax.dynamic_update_slice(view, newfrag, (i * bsize, 0))
+
+    if schedule == "allgather":
+        def init_state(myfrag):
+            return ()
+
+        def comm(i, view, newfrag, state, step, accept):
+            allv = jax.lax.all_gather(newfrag, "ue")       # (p, bsize, nv)
+            view = allv.reshape(n_pad, -1)
+            return view, state, zero, one
+        return init_state, comm
+
+    if schedule == "allgather_k":
+        def init_state(myfrag):
+            return ()
+
+        def comm(i, view, newfrag, state, step, accept):
+            do_sync = jnp.mod(step, sync_every) == sync_every - 1
+
+            def gather(_):
+                allv = jax.lax.all_gather(newfrag, "ue")
+                return allv.reshape(n_pad, -1)
+
+            def keep(_):
+                return place_own(view, newfrag, i)
+
+            sync_ok = jnp.logical_and(do_sync, accept)
+            view = jax.lax.cond(sync_ok, gather, keep, operand=None)
+            return view, state, zero, sync_ok.astype(jnp.int32)
+        return init_state, comm
+
+    if schedule == "ring":
+        perm = [(j, (j + 1) % p) for j in range(p)]
+
+        def init_state(myfrag):
+            return myfrag
+
+        def comm(i, view, newfrag, ring, step, accept):
+            ring_in = jax.lax.ppermute(ring, "ue", perm)
+            # at superstep s (0-based), incoming fragment belongs to
+            # UE (i - s - 1) mod p
+            owner = jnp.mod(i - step - 1, p)
+            # my own slot must always hold the fresh fragment
+            view = place_own(view, newfrag, i)
+            updated = jax.lax.dynamic_update_slice(
+                view, ring_in, (owner * bsize, 0))
+            view = jnp.where(
+                jnp.logical_and(accept, owner != i), updated, view)
+            # forward own fragment afresh every p steps, else relay
+            restart = jnp.mod(step + 1, p) == 0
+            ring = jnp.where(restart, newfrag, ring_in)
+            return view, ring, zero, one
+        return init_state, comm
+
+    # ---- sparsified -----------------------------------------------------
+    k = int(sparsify_k) if sparsify_k > 0 else max(min(bsize, 128),
+                                                   bsize // 8)
+    k = min(k, bsize)
+    row_thresh = float(sparsify_row_thresh)
+    refresh = max(int(sparsify_refresh_every), 1)
+    owner_off = np.arange(p, dtype=np.int32)[:, None] * bsize   # (p, 1)
+
+    def init_state(myfrag):
+        return myfrag            # the fragment as last shipped to peers
+
+    def comm(i, view, newfrag, last_sent, step, accept):
+        delta = jnp.sum(jnp.abs(newfrag - last_sent), axis=-1)  # (bsize,)
+        top_vals, top_idx = jax.lax.top_k(delta, k)
+        row_ok = top_vals > row_thresh                          # (k,)
+        nrows = jnp.sum(row_ok.astype(jnp.int32))
+        due = jnp.mod(step, refresh) == refresh - 1
+
+        view = place_own(view, newfrag, i)
+
+        def full(_):
+            allv = jax.lax.all_gather(newfrag, "ue")
+            return allv.reshape(n_pad, -1), newfrag
+
+        def sparse(_):
+            idx_all = jax.lax.all_gather(top_idx, "ue")         # (p, k)
+            ok_all = jax.lax.all_gather(row_ok, "ue")           # (p, k)
+            val_all = jax.lax.all_gather(newfrag[top_idx], "ue")  # (p,k,nv)
+            flat = (owner_off + idx_all).reshape(-1)            # (p*k,)
+            vals = val_all.reshape(p * k, -1)
+            ok = ok_all.reshape(-1)
+            cur = view[flat]
+            upd = view.at[flat].set(jnp.where(ok[:, None], vals, cur))
+            sent = last_sent.at[top_idx].set(
+                jnp.where(row_ok[:, None], newfrag[top_idx],
+                          last_sent[top_idx]))
+            return upd, sent
+
+        updated, last_sent = jax.lax.cond(due, full, sparse, operand=None)
+        # The forced refresh is the bounded-delay guarantee, so it must be
+        # delivery-reliable: a dropped sparse payload advances the sender's
+        # last_sent (those rows read as zero-delta and are never re-sent
+        # sparsely), which is only safe because the next `due` step repairs
+        # the receiver unconditionally.  Gating the refresh on `accept`
+        # would let a shard converge on a stale view.
+        view = jnp.where(jnp.logical_or(accept, due), updated, view)
+        rows_sent = jnp.where(due, zero, nrows)
+        return view, last_sent, rows_sent, due.astype(jnp.int32)
+    return init_state, comm

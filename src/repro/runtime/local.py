@@ -1,0 +1,99 @@
+"""LocalSolver — the f_i of eq. (5): update one owned fragment from a
+(stale) full view.
+
+Every substrate funnels its per-shard update through this protocol:
+
+  * the DES engine calls it from "iter" events (host numpy/scipy);
+  * the sharded streaming updater drains residuals against the same row
+    partition;
+  * the SPMD loop runs the device rendering of the same block update
+    (core.backend.google_apply restricted to the shard's rows — see
+    core.spmd, which packs per-shard operator slices through the identical
+    BackendSpec policy).
+
+`BlockLocalSolver` is the shared host implementation: eq. (6) power form or
+eq. (7) linear form restricted to rows of a Partition block, with the
+matvec dispatched per backend ("csr" scipy rows, or "bsr" — scipy BSR with
+(bm, bm) dense blocks, the host-side analogue of the bsr_pallas device
+layout).
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from ..core.partition import Partition
+from ..graph.google import GoogleOperator
+
+
+@runtime_checkable
+class LocalSolver(Protocol):
+    """f_i of eq. (5): update one fragment from a (stale) full view."""
+
+    def update_block(self, i: int, x_full: np.ndarray) -> np.ndarray: ...
+
+    def block_work(self, i: int) -> float:
+        """Relative compute cost of block i (for clock models)."""
+        ...
+
+
+def _gcd_block(dim: int, bm: int) -> int:
+    """Largest block edge <= bm that divides dim (scipy BSR needs the
+    blocksize to tile the matrix exactly)."""
+    for b in range(min(bm, max(dim, 1)), 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+class BlockLocalSolver:
+    """Eq. (6) power form (`kind='power'`) or eq. (7) linear form
+    (`kind='linear'`) restricted to rows of a partition block.
+
+    matvec="bsr" stores each block's rows in scipy BSR with (bm, bm) dense
+    blocks — the host-side analogue of the device block-CSR path (faster on
+    site-local graphs, and keeps the host flavor layout-consistent with the
+    bsr_pallas backend)."""
+
+    def __init__(self, op: GoogleOperator, part: Partition,
+                 kind: str = "power", matvec: str = "csr", bm: int = 32):
+        assert kind in ("power", "linear")
+        assert matvec in ("csr", "bsr")
+        self.op = op
+        self.part = part
+        self.kind = kind
+        self.matvec = matvec
+        self.n = op.n
+        pt_sp = op.to_scipy_pt()
+        v = op.teleport()
+        self._blocks = []
+        for i in range(part.p):
+            s, e = part.block(i)
+            rows = pt_sp[s:e]
+            nnz = pt_sp.indptr[e] - pt_sp.indptr[s]
+            if matvec == "bsr":
+                rows = rows.tobsr(blocksize=(
+                    _gcd_block(e - s, bm), _gcd_block(self.n, bm)))
+            self._blocks.append(dict(
+                pt_rows=rows,                # rows of P^T for this block
+                v=v[s:e],
+                rows=(s, e),
+                nnz=nnz,
+            ))
+        self._dangling = op.pt.dangling
+        self._alpha = op.alpha
+
+    def update_block(self, i: int, x_full: np.ndarray) -> np.ndarray:
+        blk = self._blocks[i]
+        dangling_mass = float(x_full[self._dangling].sum())
+        y = self._alpha * (blk["pt_rows"] @ x_full)
+        y += self._alpha * dangling_mass / self.n
+        if self.kind == "power":
+            y += (1.0 - self._alpha) * float(x_full.sum()) * blk["v"]
+        else:
+            y += (1.0 - self._alpha) * blk["v"]
+        return y
+
+    def block_work(self, i: int) -> float:
+        return float(max(self._blocks[i]["nnz"], 1))

@@ -1,0 +1,79 @@
+"""ShardState — one shard's owned fragment plus versioned stale views.
+
+This is the per-UE state of eq. (5): shard i owns fragment x_i and holds a
+full-length *stale* copy of every other fragment, tagged with the version it
+last imported (the tau_j^i(t) table of the paper).  The DES engine keeps one
+ShardState per simulated UE; the sharded streaming updater keeps one per
+worker; the SPMD loop carries the same fields inside its jax carry (view /
+frag / step) — the correspondence is documented in docs/runtime.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from ..core.partition import Partition
+
+
+@dataclasses.dataclass
+class ShardState:
+    """Owned fragment + versioned stale views for shard `i` of `part`."""
+
+    i: int
+    part: Partition
+    view: np.ndarray               # (n,) full-length stale view
+    frag_version: np.ndarray       # (p,) version of each fragment held
+    produced: int = 0              # own fragment version counter
+    iters: int = 0                 # local updates executed
+    stopped: bool = False
+
+    @staticmethod
+    def create(i: int, part: Partition, x0: np.ndarray) -> "ShardState":
+        return ShardState(i=i, part=part, view=np.asarray(x0).copy(),
+                          frag_version=np.zeros(part.p, dtype=np.int64))
+
+    @property
+    def rows(self) -> Tuple[int, int]:
+        return self.part.block(self.i)
+
+    def fragment(self) -> np.ndarray:
+        s, e = self.rows
+        return self.view[s:e]
+
+    def publish(self, new_frag: np.ndarray) -> int:
+        """Install this shard's freshly computed fragment into its own view
+        and bump the produced-version counter."""
+        s, e = self.rows
+        self.view[s:e] = new_frag
+        self.iters += 1
+        self.produced += 1
+        self.frag_version[self.i] = self.produced
+        return self.produced
+
+    def import_fragment(self, owner: int, frag: np.ndarray, version: int,
+                        s: int, e: int) -> bool:
+        """Accept a (possibly relayed) fragment owned by `owner` iff it is
+        fresher than the copy currently held.  Returns True on accept."""
+        if version <= self.frag_version[owner]:
+            return False
+        self.view[s:e] = frag
+        self.frag_version[owner] = version
+        return True
+
+    def import_rows(self, owner: int, rows: np.ndarray, vals: np.ndarray,
+                    version: int) -> bool:
+        """Sparsified payload: refresh only `rows` (global ids) of `owner`'s
+        fragment.  The version table still advances — a row subset is a
+        legitimate (partial) refresh under bounded-delay semantics; the
+        plan's forced full refresh bounds how long the untouched rows can
+        stay stale."""
+        if version <= self.frag_version[owner]:
+            return False
+        self.view[rows] = vals
+        self.frag_version[owner] = version
+        return True
+
+    def staleness_of(self, owner: int, produced_by_owner: int) -> int:
+        return int(produced_by_owner - self.frag_version[owner])

@@ -7,8 +7,14 @@ Layers:
   incremental  — update_ranks: Gauss-Southwell residual pushes seeded at
                  touched rows, warm-started backend-solver fallback, L1
                  certification bound.
+  sharded      — update_ranks_sharded: the Partition-sharded rendering on
+                 the runtime layer (per-shard Gauss-Southwell drains,
+                 boundary-residual outboxes through an ExchangePlan, the
+                 global certificate all-reduced by the Fig. 1
+                 TerminationDriver).
   server       — RankServer: double-buffered snapshots, atomic publish,
-                 top_k/scores/personalized queries with staleness metadata.
+                 top_k/scores/personalized queries with staleness metadata;
+                 updater="sharded" drains deltas through streaming.sharded.
   scenario     — edge-stream replay (freshness vs throughput, the Table-2
                  mirror) and the BlockOperator bridge into core.des.
 """
@@ -16,6 +22,7 @@ from .delta import (CSRGraph, DeltaGraph, DeltaReceipt, EdgeDelta,
                     FrozenGraphView, merge_deltas)
 from .incremental import (RankState, UpdateStats, cold_state, ppr_push,
                           refresh_residual, update_ranks)
+from .sharded import ShardedUpdateStats, update_ranks_sharded
 from .server import RankServer, RankSnapshot
 from .scenario import (BatchRecord, ReplayConfig, ReplayResult,
                        StreamingBlockOperator, replay_trace,
@@ -26,6 +33,7 @@ __all__ = [
     "merge_deltas",
     "RankState", "UpdateStats", "cold_state", "ppr_push",
     "refresh_residual", "update_ranks",
+    "ShardedUpdateStats", "update_ranks_sharded",
     "RankServer", "RankSnapshot",
     "BatchRecord", "ReplayConfig", "ReplayResult",
     "StreamingBlockOperator", "replay_trace", "synth_edge_trace",

@@ -51,6 +51,73 @@ from ..graph.csr import CSRGraph, TransitionT
 from ..graph.google import GoogleOperator
 
 
+def _splice_transition(prev: TransitionT, rcpt: "DeltaReceipt",
+                       out_deg: np.ndarray,
+                       dangling: np.ndarray) -> TransitionT:
+    """Patch P^T from version v-1 to v by row-splicing only the entries of
+    touched sources, instead of the O(nnz log nnz) full rebuild.
+
+    P^T is CSR over destinations with sources ascending within each row
+    (the canonical order `TransitionT.from_graph` produces).  A source u
+    whose out-row changed contributes three edit sets: entries to delete
+    ((j, u) for j removed from u's row), entries to insert (j added, weight
+    1/new_deg), and surviving entries whose weight must refresh to
+    1/new_deg.  All three are O(touched) against the previous arrays —
+    membership tests via (row, src) keys, insertion points via one merge
+    `searchsorted` on the kept keys — so the whole patch is O(nnz) copies
+    with no sort over the full edge list.
+    """
+    n_new = rcpt.n_new
+    indptr = prev.indptr
+    if n_new > prev.n:
+        indptr = np.concatenate(
+            [indptr, np.full(n_new - prev.n, indptr[-1], dtype=np.int64)])
+
+    add_r, add_s, del_r, del_s = [], [], [], []
+    for u, row0, row1 in zip(rcpt.touched, rcpt.old_rows, rcpt.new_rows):
+        adds = np.setdiff1d(row1, row0, assume_unique=True)
+        dels = np.setdiff1d(row0, row1, assume_unique=True)
+        add_r.append(adds)
+        add_s.append(np.full(adds.size, u, dtype=np.int64))
+        del_r.append(dels)
+        del_s.append(np.full(dels.size, u, dtype=np.int64))
+    add_r = np.concatenate(add_r) if add_r else np.empty(0, np.int64)
+    add_s = np.concatenate(add_s) if add_s else np.empty(0, np.int64)
+    del_r = np.concatenate(del_r) if del_r else np.empty(0, np.int64)
+    del_s = np.concatenate(del_s) if del_s else np.empty(0, np.int64)
+
+    keys = prev.row_ids.astype(np.int64) * n_new + prev.src.astype(np.int64)
+    keep = np.ones(prev.nnz, dtype=bool)
+    if del_r.size:
+        keep &= ~np.isin(keys, del_r * n_new + del_s)
+    src_k = prev.src[keep]
+    row_k = prev.row_ids[keep]
+    w_k = np.asarray(prev.weight[keep], dtype=np.float64).copy()
+    # surviving entries of touched sources: refresh to 1/new_deg
+    upd = np.isin(src_k, rcpt.touched)
+    if upd.any():
+        w_k[upd] = 1.0 / out_deg[src_k[upd].astype(np.int64)]
+
+    if add_r.size:
+        ins_keys = add_r * n_new + add_s
+        order = np.argsort(ins_keys, kind="stable")   # O(touched) only
+        ins_keys = ins_keys[order]
+        add_r, add_s = add_r[order], add_s[order]
+        pos = np.searchsorted(keys[keep], ins_keys)
+        src_f = np.insert(src_k, pos, add_s.astype(np.int32))
+        row_f = np.insert(row_k, pos, add_r.astype(np.int32))
+        w_f = np.insert(w_k, pos, 1.0 / out_deg[add_s])
+    else:
+        src_f, row_f, w_f = src_k, row_k, w_k
+
+    delta_cnt = (np.bincount(add_r, minlength=n_new)
+                 - np.bincount(del_r, minlength=n_new))
+    indptr_f = indptr + np.concatenate(
+        [[0], np.cumsum(delta_cnt, dtype=np.int64)])
+    return TransitionT(n=n_new, indptr=indptr_f, src=src_f, weight=w_f,
+                       row_ids=row_f, dangling=dangling)
+
+
 def _as_ids(a) -> np.ndarray:
     arr = np.asarray(a, dtype=np.int64).ravel()
     if arr.size and arr.min() < 0:
@@ -186,6 +253,7 @@ class DeltaGraph:
         self._out_deg = base.out_degree.copy()
         self._log_edges = 0
         self.version = 0
+        self._last_receipt: Optional[DeltaReceipt] = None
         # per-version memoized views: version -> object
         self._snap: Dict[int, CSRGraph] = {0: base}
         self._pt: Dict[int, TransitionT] = {}
@@ -319,6 +387,7 @@ class DeltaGraph:
             old_rows=tuple(o_rows), new_rows=tuple(n_rows),
             n_added=n_added, n_deleted=n_deleted,
         )
+        self._last_receipt = rcpt   # feeds the P^T row-splice (transition)
         if self._log_edges > self.compact_frac * max(self._base.nnz, 1):
             self.compact()
         self._gc_views()
@@ -377,12 +446,38 @@ class DeltaGraph:
 
     def transition(self) -> TransitionT:
         """P^T of the current version (shared by every operator view of
-        this version, so device edge arrays upload once)."""
+        this version, so device edge arrays upload once).
+
+        When the previous version's P^T is memoized and the last receipt is
+        one step behind, the new transition is *row-spliced* from it
+        (O(touched) edits + O(nnz) copies) instead of rebuilt with the full
+        O(nnz log nnz) destination sort.  Keys stay per-version, and
+        `compact()` never bumps the version, so the splice inputs — the
+        previous P^T and the receipt, neither of which references the base
+        CSR — survive compaction unchanged."""
         pt = self._pt.get(self.version)
         if pt is None:
-            pt = TransitionT.from_graph(self.graph())
+            pt = self._patched_transition()
+            if pt is None:
+                pt = TransitionT.from_graph(self.graph())
             self._pt[self.version] = pt
         return pt
+
+    def _patched_transition(self) -> Optional[TransitionT]:
+        """Row-splice P^T from version-1 when cheap; None => full rebuild."""
+        rcpt = self._last_receipt
+        prev = self._pt.get(self.version - 1)
+        if rcpt is None or prev is None or rcpt.version != self.version:
+            return None
+        if rcpt.touched.size == 0 and rcpt.n_new == prev.n:
+            return prev          # value-identical: share the instance (and
+            #                      its memoized device edge arrays)
+        edits = int(sum(r.size for r in rcpt.old_rows)
+                    + sum(r.size for r in rcpt.new_rows))
+        if edits > 0.25 * max(prev.nnz, 1):
+            return None          # batch too global: the rebuild is cheaper
+        return _splice_transition(prev, rcpt, self._out_deg,
+                                  self.dangling_mask)
 
     def scipy_pt(self):
         """scipy CSR of P^T for host-side exact residuals, per version."""

@@ -147,17 +147,18 @@ class StreamingBlockOperator:
 class ReplayConfig:
     """Clock model for the single-updater replay (rates in the spirit of
     DESConfig's calibrated edge-ops/s accounting, but calibrated to this
-    repo's measured CPU-container throughput: ~1e5 scalar pushes/s on the
-    host push path, ~2e7 edge-ops/s through the jitted backend solver)."""
+    repo's measured CPU-container throughput: ~1.2e6 pushes/s on the
+    batched-frontier host push path (was ~1e5 for the PR 2 per-node
+    drain), ~2e7 edge-ops/s through the jitted backend solver)."""
 
     query_rate: float = 200.0        # Poisson queries per sim second
     delta_interval: float = 0.25     # mean seconds between batch arrivals
-    push_rate: float = 1e5           # pushes the updater sustains per second
+    push_rate: float = 1.2e6         # pushes the updater sustains per second
     solve_edge_rate: float = 2e7     # edge-ops/s for fallback sweeps
     update_overhead: float = 2e-3    # per-batch fixed cost (s)
     tol: float = 1e-5                # serving-grade certificate
     backend: str = "segment_sum"
-    push_frontier_frac: float = 0.10
+    push_frontier_frac: float = 0.25  # crossover for the batched sweep
     seed: int = 0
 
 

@@ -40,6 +40,7 @@ import numpy as np
 from .delta import DeltaGraph, EdgeDelta, FrozenGraphView, merge_deltas
 from .incremental import (RankState, UpdateStats, cold_state, ppr_push,
                           refresh_residual, update_ranks)
+from .sharded import ShardedUpdateStats, update_ranks_sharded
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,9 +75,15 @@ class RankServer:
     def __init__(self, dg: DeltaGraph, alpha: float = 0.85,
                  tol: float = 1e-8, backend: str = "segment_sum",
                  method: str = "linear",
-                 push_frontier_frac: float = 0.10,
+                 push_frontier_frac: float = 0.25,
                  refresh_every: int = 64,
-                 cold_tol: Optional[float] = None):
+                 cold_tol: Optional[float] = None,
+                 updater: str = "incremental",
+                 shards: int = 4,
+                 exchange: str = "allgather"):
+        if updater not in ("incremental", "sharded"):
+            raise ValueError(f"unknown updater {updater!r}; expected "
+                             "'incremental' or 'sharded'")
         self.dg = dg
         self.alpha = alpha
         self.tol = tol
@@ -84,6 +91,13 @@ class RankServer:
         self.method = method
         self.push_frontier_frac = push_frontier_frac
         self.refresh_every = refresh_every
+        # updater="sharded": drain deltas with the Partition-sharded
+        # runtime-layer updater (streaming.sharded) — p shards exchanging
+        # boundary residual under `exchange` ("allgather" | "sparsified"),
+        # certificate via the Fig. 1 TerminationDriver
+        self.updater = updater
+        self.shards = shards
+        self.exchange = exchange
 
         # working buffer (updater-owned) + cold certification
         self._state: RankState = cold_state(
@@ -104,7 +118,7 @@ class RankServer:
         self.batches_applied = 0
         self.fallbacks = 0
         self.queries_served = 0
-        self.last_stats: Optional[UpdateStats] = None
+        self.last_stats = None   # UpdateStats | ShardedUpdateStats
 
     # ------------------------------------------------------------------
     # the swap protocol
@@ -150,13 +164,19 @@ class RankServer:
             if not batch:
                 return None
             merged = merge_deltas(batch)
-            self._state, stats = update_ranks(
-                self.dg, merged, self._state, tol=self.tol,
-                backend=self.backend, method=self.method,
-                push_frontier_frac=self.push_frontier_frac)
+            if self.updater == "sharded":
+                self._state, stats = update_ranks_sharded(
+                    self.dg, merged, self._state, tol=self.tol,
+                    p=self.shards, exchange=self.exchange,
+                    backend=self.backend, method=self.method)
+            else:
+                self._state, stats = update_ranks(
+                    self.dg, merged, self._state, tol=self.tol,
+                    backend=self.backend, method=self.method,
+                    push_frontier_frac=self.push_frontier_frac)
             self.batches_applied += 1
             self._batches_since_refresh += 1
-            if stats.path != "push":
+            if stats.path not in ("push", "sharded_push"):
                 self.fallbacks += 1
                 self._batches_since_refresh = 0
             elif self._batches_since_refresh >= self.refresh_every:

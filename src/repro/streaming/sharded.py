@@ -1,0 +1,268 @@
+"""Partition-sharded certified streaming updates (runtime-layer rendering).
+
+The single-updater `update_ranks` drains the whole residual from one
+thread.  This module shards the drain over a row Partition — the streaming
+rendering of the paper's eq. (5) cycle, built directly on `repro.runtime`:
+
+  * each shard runs Gauss-Southwell pushes on its *own* rows (the batched
+    frontier sweep of `incremental._push`, restricted to the shard's row
+    range — the LocalSolver role);
+  * residual mass a push diffuses into rows another shard owns is
+    *boundary residual*: it accumulates in a per-shard outbox and moves to
+    its owner through a `runtime.ExchangePlan` — every superstep under
+    "allgather", or §6-targeted under "sparsified" (an outbox ships only
+    when its L1 mass exceeds a threshold, with a forced delivery every
+    `refresh_every` supersteps so delays stay bounded);
+  * the global certificate comes from the Fig. 1 protocol, not from a
+    centralized residual sum: each superstep every shard reports
+    ||r_i||_1 = (own-row residual) + (undelivered outbox mass) and the
+    `runtime.TerminationDriver` all-reduces the reports, runs the p
+    computing-UE machines plus the monitor on the shared verdict
+    (sum <= (1-alpha)*tol), and issues STOP once convergence persists.
+    Because every unit of residual mass is counted by exactly one shard at
+    any instant (own rows, or the sender's outbox while in flight), the
+    all-reduced sum upper-bounds the true ||r||_1 and the certificate
+    ||x - x*||_1 <= sum_i ||r_i||_1 / (1 - alpha) is sound at STOP time.
+
+The dense uniform terms a dangling push would smear (column = e/n) fold
+into a scalar that all shards share and apply at superstep boundaries, so
+pushes stay local.  When a batch is too global to drain (work caps), the
+updater falls back to the same warm-started backend solve as
+`update_ranks`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.pagerank import solve_linear, solve_power
+from ..core.partition import Partition, block_rows
+from ..runtime.driver import TerminationDriver
+from ..runtime.exchange import AllToAllPlan, SparsifiedPlan
+from .delta import DeltaGraph, EdgeDelta
+from .incremental import (RankState, _check_cert, _exact_residual,
+                          _frontier_contrib, _seed_delta, _view_arrays)
+
+
+@dataclasses.dataclass
+class ShardedUpdateStats:
+    """What one sharded update did (the Fig. 1 transcript included)."""
+
+    path: str                  # "sharded_push" | "solve_linear" | "solve_power"
+    p: int
+    supersteps: int
+    pushes: int                # frontier pops over all shards
+    pushes_per_shard: np.ndarray
+    exchanges: int             # outbox deliveries that actually shipped
+    bytes_moved: int           # modeled payload bytes ((idx, value) pairs)
+    seed_l1: float
+    resid_l1: float            # the driver's all-reduced sum at STOP
+    cert: float                # resid_l1 / (1 - alpha) — the Fig. 1 bound
+    stop_superstep: int = -1   # superstep at which the monitor issued STOP
+    solver_iters: int = 0
+
+
+def _drain_shard(view, arrays, x: np.ndarray, r: np.ndarray,
+                 outbox: np.ndarray, s: int, e: int, alpha: float,
+                 local_target: float, eps_floor: float,
+                 c_holder: list) -> int:
+    """Drain shard rows [s, e) to ||r[s:e]||_1 <= local_target with batched
+    frontier sweeps.  Contributions to own rows feed back into r (and keep
+    draining); contributions to foreign rows accumulate into `outbox`
+    (addressed by global row id); dangling mass accumulates into the shared
+    uniform scalar `c_holder[0]`.  Returns the number of pushes."""
+    n = r.shape[0]
+    pushes = 0
+    bs = e - s
+    if bs <= 0:
+        return 0
+    while True:
+        r_own = r[s:e]
+        l1_own = float(np.abs(r_own).sum())
+        if l1_own <= local_target:
+            return pushes
+        eps = max(l1_own / bs, eps_floor)
+        frontier = np.flatnonzero(np.abs(r_own) >= eps)
+        while frontier.size == 0:
+            if eps <= eps_floor:
+                return pushes
+            eps = max(eps / 8.0, eps_floor)
+            frontier = np.flatnonzero(np.abs(r_own) >= eps)
+        frontier = frontier + s
+        pushes += int(frontier.size)
+        moved = r[frontier].copy()
+        x[frontier] += moved
+        r[frontier] = 0.0
+        dst, val, dmass = _frontier_contrib(view, arrays, frontier, moved,
+                                            alpha)
+        if dmass != 0.0:
+            c_holder[0] += alpha * dmass / n
+        if dst.size:
+            own = (dst >= s) & (dst < e)
+            if own.any():
+                r[s:e] += np.bincount(dst[own] - s, weights=val[own],
+                                      minlength=bs)
+            foreign = ~own
+            if foreign.any():
+                np.add.at(outbox, dst[foreign], val[foreign])
+
+
+def update_ranks_sharded(
+        dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
+        p: int = 4, tol: float = 1e-8, exchange: str = "allgather",
+        sparsify_thresh: Optional[float] = None,
+        sparsify_refresh_every: int = 4,
+        pc_max_compute: int = 1, pc_max_monitor: int = 1,
+        max_supersteps: int = 10_000, max_push_factor: float = 40.0,
+        backend: str = "segment_sum", method: str = "linear",
+        solver_max_iters: int = 1000,
+        bytes_per_entry: int = 8) -> Tuple[RankState, ShardedUpdateStats]:
+    """Apply `delta` and certify the updated ranks with p shards.
+
+    Mirrors `update_ranks` (same RankState in/out, same exact residual
+    bookkeeping, same warm-started fallback) but runs the drain as the
+    runtime-layer cycle described in the module docstring.  On success
+    ``stats.cert`` is the TerminationDriver's all-reduced bound and
+    ``state.cert <= stats.cert`` (state.r is the exactly-maintained
+    residual, whose L1 the driver's sum upper-bounds).
+    """
+    if state.version != dg.version:
+        raise ValueError(
+            f"state at version {state.version} but graph at {dg.version}; "
+            "states must track every delta (or be rebuilt via cold_state)")
+    if method not in ("linear", "power"):
+        raise ValueError(f"unknown method {method!r}")
+    if exchange not in ("allgather", "sparsified"):
+        raise ValueError(f"unknown exchange {exchange!r}")
+    if delta.new_nodes and state.v is not None:
+        raise NotImplementedError(
+            "node arrivals with a custom teleport vector are not "
+            "supported incrementally; rebuild via cold_state")
+    alpha = state.alpha
+    rcpt = dg.apply(delta)
+    c = _seed_delta(dg, rcpt, state)
+    x, r = state.x, state.r
+    n = rcpt.n_new
+    seed_l1 = float(np.abs(r).sum()) + abs(c) * n
+
+    # the sharded drain keeps no per-shard rescale state, so the uniform
+    # component folds densely up front (exact; O(n) once per batch)
+    if c != 0.0:
+        r += c
+
+    part = block_rows(n, p)
+    l1_target = (1.0 - alpha) * tol
+    local_target = l1_target / (2.0 * p)
+    eps_floor = l1_target / max(n, 1)
+    max_pushes = int(max_push_factor * n)
+
+    if exchange == "sparsified":
+        thresh = (sparsify_thresh if sparsify_thresh is not None
+                  else 0.1 * l1_target / p)
+        plan = SparsifiedPlan(p, thresh=thresh,
+                              refresh_every=sparsify_refresh_every)
+    else:
+        plan = AllToAllPlan(p)
+    driver = TerminationDriver(p, pc_max_compute=pc_max_compute,
+                               pc_max_monitor=pc_max_monitor)
+
+    arrays = _view_arrays(dg)
+    outboxes = [np.zeros(n) for _ in range(p)]
+    c_pending = [0.0]
+    pushes_per_shard = np.zeros(p, dtype=np.int64)
+    exchanges = 0
+    bytes_moved = 0
+    total = float("inf")
+    stop_superstep = -1
+    step = 0
+    capped = False
+
+    prev_total = max(seed_l1, l1_target)
+    while stop_superstep < 0 and step < max_supersteps:
+        # ---- local drains (each shard's own rows) ----------------------
+        # Each superstep drains to a *sliding* target: a fraction of the
+        # previous all-reduced total (no point draining own rows orders of
+        # magnitude below the mass peers are about to export here), floored
+        # at the final per-shard share of the certificate target.  Mass
+        # decays geometrically across supersteps and the total push count
+        # stays proportional to log(seed/target).
+        step_target = max(local_target, 0.05 * prev_total / p)
+        for i in range(p):
+            s, e = part.block(i)
+            pushes_per_shard[i] += _drain_shard(
+                dg, arrays, x, r, outboxes[i], s, e, alpha,
+                step_target, eps_floor, c_pending)
+        if int(pushes_per_shard.sum()) > max_pushes:
+            capped = True
+            break
+
+        # ---- boundary-residual exchange (ExchangePlan) -----------------
+        for i in range(p):
+            for d in range(p):
+                if d == i or not plan.wants(i, d, step):
+                    continue
+                s, e = part.block(d)
+                box = outboxes[i][s:e]
+                mass = float(np.abs(box).sum())
+                if mass == 0.0:
+                    continue
+                if not plan.gate_mass(i, d, step, mass):
+                    continue
+                nz = int(np.count_nonzero(box))
+                r[s:e] += box
+                box[:] = 0.0
+                plan.note_sent(i, d, step)
+                exchanges += 1
+                bytes_moved += nz * (4 + bytes_per_entry)
+        # the uniform scalar is shared state: fold it densely once all
+        # shards have accumulated into it (an all-reduced scalar, 0 bytes
+        # of payload in the model)
+        if c_pending[0] != 0.0:
+            r += c_pending[0]
+            c_pending[0] = 0.0
+
+        # ---- Fig. 1 over all-reduced per-shard ||r_i||_1 ---------------
+        values = np.empty(p)
+        for i in range(p):
+            s, e = part.block(i)
+            values[i] = (float(np.abs(r[s:e]).sum())
+                         + float(np.abs(outboxes[i]).sum()))
+        total, issued = driver.allreduce_step(values, l1_target)
+        prev_total = max(total, l1_target)
+        step += 1
+        if issued:
+            stop_superstep = step
+
+    # fold whatever is still undelivered back into r: state.r stays the
+    # exact residual, and the certified total already counted this mass
+    for box in outboxes:
+        nz = np.flatnonzero(box)
+        if nz.size:
+            r[nz] += box[nz]
+    if c_pending[0] != 0.0:
+        r += c_pending[0]
+
+    pushes = int(pushes_per_shard.sum())
+    if stop_superstep > 0 and not capped:
+        return state, ShardedUpdateStats(
+            path="sharded_push", p=p, supersteps=step, pushes=pushes,
+            pushes_per_shard=pushes_per_shard, exchanges=exchanges,
+            bytes_moved=bytes_moved, seed_l1=seed_l1, resid_l1=total,
+            cert=total / (1.0 - alpha), stop_superstep=stop_superstep)
+
+    # ---- warm-started full solve (same contract as update_ranks) -------
+    op = dg.operator(alpha, v=state.v)
+    solver = solve_linear if method == "linear" else solve_power
+    res = solver(op, x0=state.x, tol=0.5 * (1.0 - alpha) * tol,
+                 max_iters=solver_max_iters, backend=backend)
+    state.x = np.asarray(res.x, dtype=np.float64)
+    state.r = _exact_residual(dg, state.x, alpha, state.v)
+    resid = state.resid_l1
+    _check_cert(resid, tol, alpha, f"solve_{method}[{backend}]")
+    return state, ShardedUpdateStats(
+        path=f"solve_{method}", p=p, supersteps=step, pushes=pushes,
+        pushes_per_shard=pushes_per_shard, exchanges=exchanges,
+        bytes_moved=bytes_moved, seed_l1=seed_l1, resid_l1=resid,
+        cert=resid / (1.0 - alpha), solver_iters=res.iters)
