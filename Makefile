@@ -20,6 +20,6 @@ stream-demo:
 	$(PY) examples/streaming_rank_server.py
 
 # tier-1 gate + the quick benchmark pass that refreshes BENCH_PR<N>.json
-# (currently BENCH_PR3.json; see benchmarks/run.py --out) — run before
+# (currently BENCH_PR4.json; see benchmarks/run.py --out) — run before
 # every PR
 verify: test bench-quick

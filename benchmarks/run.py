@@ -4,9 +4,10 @@ beyond-paper studies. Prints ``name,us_per_call,derived`` CSV at the end.
     PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_PRN.json]
 
 Every run (including --quick) starts with the matvec-backend bench, the
-streaming-update bench and the sharded-runtime bench (sparsified vs
-allgather) and writes the machine-readable perf-trajectory file (``--out``,
-default BENCH_PR3.json) at the repo root; --quick then skips the slow DES
+streaming-update bench, the sharded-runtime bench (sparsified vs
+allgather) and the async-executor bench (async vs superstep shard drains)
+and writes the machine-readable perf-trajectory file (``--out``, default
+BENCH_PR4.json) at the repo root; --quick then skips the slow DES
 paper-table and SPMD staleness studies.
 """
 from __future__ import annotations
@@ -26,7 +27,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR3.json",
+    ap.add_argument("--out", default="BENCH_PR4.json",
                     help="perf-trajectory output (BENCH_PR<N>.json for "
                          "PR N; relative paths land at the repo root)")
     args = ap.parse_args()
@@ -86,6 +87,20 @@ def main() -> None:
         f"path={sh['path']},steps={sh['supersteps']},"
         f"cert={sh['cert']:.1e},bytes={sh['bytes_moved']}"))
     brec["sharded"] = shrec
+
+    print("== Async shard executor (async vs superstep, 50k, p=1..8) ==")
+    from benchmarks import async_shard_bench
+    arec = async_shard_bench.main()
+    a4 = next(r for r in arec["drain_dominated"]
+              if r["mode"] == "async" and r["p"] == 4)
+    csv_rows.append((
+        "async_shard",
+        f"{a4['s'] * 1e6:.0f}",
+        f"p4_vs_p1_async={arec['speedup_p4_vs_p1_async']:.2f}x,"
+        f"raw={arec['raw_speedup_p4_vs_p1_async']:.2f}x,"
+        f"hetero_vs_superstep="
+        f"{arec['speedup_async_vs_superstep_hetero_p4']:.2f}x"))
+    brec["async_shard"] = arec
     out_path.write_text(json.dumps(brec, indent=1))
     (RESULTS / "streaming_bench.json").write_text(
         json.dumps(srec, indent=1))

@@ -35,7 +35,11 @@ import numpy as np
 
 from .partition import Partition
 from ..runtime.state import ShardState
-from ..runtime.driver import TerminationDriver
+# submodule reference, not `from ..runtime.driver import TerminationDriver`:
+# runtime.driver itself imports core.termination (which runs this package's
+# __init__), so during an `import repro.runtime` the class attribute does
+# not exist yet — the module object in sys.modules always does
+from ..runtime import driver as _runtime_driver
 from ..runtime.exchange import make_plan
 from ..runtime.local import LocalSolver as BlockOperator
 from ..runtime.local import BlockLocalSolver as PageRankBlockOperator
@@ -192,8 +196,9 @@ class AsyncDES:
         # runtime substrate: per-UE shard state, exchange plan, Fig. 1 driver
         shards = [ShardState.create(i, part, self.x0) for i in range(p)]
         plan = self._make_plan()
-        driver = TerminationDriver(p, pc_max_compute=cfg.pc_max_compute,
-                                   pc_max_monitor=cfg.pc_max_monitor)
+        driver = _runtime_driver.TerminationDriver(
+            p, pc_max_compute=cfg.pc_max_compute,
+            pc_max_monitor=cfg.pc_max_monitor)
 
         iters = np.zeros(p, dtype=np.int64)
         local_conv_iter = np.full(p, -1, dtype=np.int64)

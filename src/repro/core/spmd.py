@@ -64,7 +64,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .partition import Partition, block_rows
-from ..runtime.driver import TerminationDriver
+# submodule reference (see des.py): runtime.driver imports core.termination,
+# so its class attributes may not exist yet during an `import repro.runtime`
+from ..runtime import driver as _runtime_driver
 from ..runtime.exchange import spmd_exchange
 from ..graph.google import GoogleOperator
 
@@ -369,7 +371,7 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
                 i, view, newfrag, comm_state, step, accept)
 
             # ---- in-loop Fig. 1 protocol (all-reduced bits) --------------
-            pc, mon_pc, done_now = TerminationDriver.bits_step(
+            pc, mon_pc, done_now = _runtime_driver.TerminationDriver.bits_step(
                 resid < tol, pc, mon_pc, p=p,
                 pc_max_compute=cfg.pc_max_compute,
                 pc_max_monitor=cfg.pc_max_monitor,

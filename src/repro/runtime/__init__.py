@@ -19,12 +19,18 @@ three substrates that used to hand-roll it (`core.des`, `core.spmd`,
   driver   — TerminationDriver: drives the pure Fig. 1 machines
              (core.termination) in the message-passing, all-reduced-value,
              and all-reduced-bit renderings.
+  executor — AsyncShardExecutor: the cycle over real worker threads — one
+             thread per shard, per-pair boundary-residual mailboxes (no
+             superstep barrier), ExchangePlan consulted per local update,
+             termination through the driver's message rendering.
 """
 from .state import ShardState
 from .local import LocalSolver, BlockLocalSolver
 from .exchange import (ExchangePlan, AllToAllPlan, RingPlan, AdaptivePlan,
                        SparsifiedPlan, make_plan, spmd_exchange)
 from .driver import TerminationDriver
+from .executor import (AsyncRunResult, AsyncShardExecutor, PairMailbox,
+                       UniformAccumulator)
 
 __all__ = [
     "ShardState",
@@ -32,4 +38,6 @@ __all__ = [
     "ExchangePlan", "AllToAllPlan", "RingPlan", "AdaptivePlan",
     "SparsifiedPlan", "make_plan", "spmd_exchange",
     "TerminationDriver",
+    "AsyncRunResult", "AsyncShardExecutor", "PairMailbox",
+    "UniformAccumulator",
 ]

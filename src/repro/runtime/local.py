@@ -19,12 +19,15 @@ layout).
 """
 from __future__ import annotations
 
-from typing import Protocol, runtime_checkable
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
 
 import numpy as np
 
-from ..core.partition import Partition
 from ..graph.google import GoogleOperator
+
+if TYPE_CHECKING:                    # annotation-only (see state.py: a
+    from ..core.partition import Partition   # module-level import would
+    # recreate the runtime -> core -> des -> runtime cycle)
 
 
 @runtime_checkable

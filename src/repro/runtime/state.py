@@ -10,11 +10,14 @@ frag / step) — the correspondence is documented in docs/runtime.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import TYPE_CHECKING, Tuple
 
 import numpy as np
 
-from ..core.partition import Partition
+if TYPE_CHECKING:                    # annotation-only: a module-level
+    from ..core.partition import Partition   # import would recreate the
+    # state -> core -> des -> state cycle that used to make
+    # `import repro.runtime` fail unless repro.core was imported first
 
 
 @dataclasses.dataclass

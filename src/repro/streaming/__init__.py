@@ -10,11 +10,14 @@ Layers:
   sharded      — update_ranks_sharded: the Partition-sharded rendering on
                  the runtime layer (per-shard Gauss-Southwell drains,
                  boundary-residual outboxes through an ExchangePlan, the
-                 global certificate all-reduced by the Fig. 1
-                 TerminationDriver).
+                 global certificate from the Fig. 1 TerminationDriver).
+                 mode="superstep" is the deterministic sequential loop;
+                 mode="async" runs the drains on AsyncShardExecutor
+                 worker threads with zero barriers (docs/runtime.md).
   server       — RankServer: double-buffered snapshots, atomic publish,
                  top_k/scores/personalized queries with staleness metadata;
-                 updater="sharded" drains deltas through streaming.sharded.
+                 updater="sharded" (+ shard_mode="async") drains deltas
+                 through streaming.sharded.
   scenario     — edge-stream replay (freshness vs throughput, the Table-2
                  mirror) and the BlockOperator bridge into core.des.
 """

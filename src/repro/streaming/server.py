@@ -61,6 +61,12 @@ class RankSnapshot:
 
     def top_k(self, k: int = 10) -> Tuple[np.ndarray, np.ndarray]:
         k = min(k, self.n)
+        if k <= 0:
+            # np.argpartition(-x, k - 1) would partition on the *last*
+            # element for k == 0 (kth=-1 wraps around) — return explicit
+            # empties instead
+            return (np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=self.x.dtype))
         part = np.argpartition(-self.x, k - 1)[:k]
         order = part[np.argsort(-self.x[part], kind="stable")]
         return order, self.x[order]
@@ -80,10 +86,14 @@ class RankServer:
                  cold_tol: Optional[float] = None,
                  updater: str = "incremental",
                  shards: int = 4,
-                 exchange: str = "allgather"):
+                 exchange: str = "allgather",
+                 shard_mode: str = "superstep"):
         if updater not in ("incremental", "sharded"):
             raise ValueError(f"unknown updater {updater!r}; expected "
                              "'incremental' or 'sharded'")
+        if shard_mode not in ("superstep", "async"):
+            raise ValueError(f"unknown shard_mode {shard_mode!r}; expected "
+                             "'superstep' or 'async'")
         self.dg = dg
         self.alpha = alpha
         self.tol = tol
@@ -94,10 +104,13 @@ class RankServer:
         # updater="sharded": drain deltas with the Partition-sharded
         # runtime-layer updater (streaming.sharded) — p shards exchanging
         # boundary residual under `exchange` ("allgather" | "sparsified"),
-        # certificate via the Fig. 1 TerminationDriver
+        # certificate via the Fig. 1 TerminationDriver.  shard_mode="async"
+        # runs the drains on AsyncShardExecutor worker threads (no
+        # superstep barrier; see docs/runtime.md).
         self.updater = updater
         self.shards = shards
         self.exchange = exchange
+        self.shard_mode = shard_mode
 
         # working buffer (updater-owned) + cold certification
         self._state: RankState = cold_state(
@@ -168,23 +181,29 @@ class RankServer:
                 self._state, stats = update_ranks_sharded(
                     self.dg, merged, self._state, tol=self.tol,
                     p=self.shards, exchange=self.exchange,
+                    mode=self.shard_mode,
                     backend=self.backend, method=self.method)
             else:
                 self._state, stats = update_ranks(
                     self.dg, merged, self._state, tol=self.tol,
                     backend=self.backend, method=self.method,
                     push_frontier_frac=self.push_frontier_frac)
-            self.batches_applied += 1
+            fell_back = stats.path not in ("push", "sharded_push")
             self._batches_since_refresh += 1
-            if stats.path not in ("push", "sharded_push"):
-                self.fallbacks += 1
+            if fell_back:
                 self._batches_since_refresh = 0
             elif self._batches_since_refresh >= self.refresh_every:
                 # long pure-push chains re-derive the residual exactly so
                 # float drift never silently erodes the certificate
                 refresh_residual(self.dg, self._state)
                 self._batches_since_refresh = 0
-            self.last_stats = stats
+            # all telemetry lives under _stat_lock (concurrent query
+            # threads read these counters; _lock only serializes updaters)
+            with self._stat_lock:
+                self.batches_applied += 1
+                if fell_back:
+                    self.fallbacks += 1
+                self.last_stats = stats
             self._cut_snapshot()
             return stats
 
@@ -244,10 +263,21 @@ class RankServer:
                         alpha=self.alpha, tol=tol)
 
     def staleness(self) -> Dict[str, float]:
-        """How far behind the stable buffer is, right now."""
-        snap = self._snapshot
+        """How far behind the stable buffer is, right now.
+
+        Seqlock-style read: the graph version is captured *with* the
+        snapshot (re-read until the snapshot reference is stable around
+        the version read), so a daemon updater mid-`dg.apply`/publish
+        cannot produce a lag computed against a snapshot from a different
+        instant.  Lag is clamped at 0: `dg.version` is bumped before the
+        matching snapshot publishes, never after."""
+        for _ in range(8):
+            snap = self._snapshot
+            version = self.dg.version
+            if self._snapshot is snap:
+                break
         return dict(
-            version_lag=float(self.dg.version - snap.version),
+            version_lag=float(max(version - snap.version, 0)),
             pending_deltas=float(self._queue.qsize()),
             age_s=float(time.time() - snap.published_at),
             cert=float(snap.cert),

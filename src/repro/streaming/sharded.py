@@ -9,23 +9,35 @@ rendering of the paper's eq. (5) cycle, built directly on `repro.runtime`:
     range — the LocalSolver role);
   * residual mass a push diffuses into rows another shard owns is
     *boundary residual*: it accumulates in a per-shard outbox and moves to
-    its owner through a `runtime.ExchangePlan` — every superstep under
+    its owner through a `runtime.ExchangePlan` — every epoch under
     "allgather", or §6-targeted under "sparsified" (an outbox ships only
     when its L1 mass exceeds a threshold, with a forced delivery every
-    `refresh_every` supersteps so delays stay bounded);
+    `refresh_every` sender epochs so delays stay bounded; epochs with an
+    *empty* outbox still advance the refresh clock — nothing was withheld,
+    so quiet pairs bank no forced-refresh debt);
   * the global certificate comes from the Fig. 1 protocol, not from a
-    centralized residual sum: each superstep every shard reports
-    ||r_i||_1 = (own-row residual) + (undelivered outbox mass) and the
-    `runtime.TerminationDriver` all-reduces the reports, runs the p
-    computing-UE machines plus the monitor on the shared verdict
-    (sum <= (1-alpha)*tol), and issues STOP once convergence persists.
-    Because every unit of residual mass is counted by exactly one shard at
-    any instant (own rows, or the sender's outbox while in flight), the
-    all-reduced sum upper-bounds the true ||r||_1 and the certificate
+    centralized residual sum.  Because every unit of residual mass is
+    counted by exactly one shard at any instant (own rows, mailbox in
+    flight, or the sender's undelivered outbox), the reduced sum
+    upper-bounds the true ||r||_1 and the certificate
     ||x - x*||_1 <= sum_i ||r_i||_1 / (1 - alpha) is sound at STOP time.
 
+Two execution modes (`mode=`):
+
+  "superstep" (default) — the original sequential loop: all p drains, then
+    the exchange, then one `TerminationDriver.allreduce_step` per
+    superstep.  Deterministic; the golden reference.
+  "async" — the drains run concurrently on `runtime.AsyncShardExecutor`
+    worker threads with per-pair mailboxes and **no barrier of any kind**:
+    the plan is consulted after every local update and termination is
+    driven through the driver's message rendering (`ue_step` /
+    `monitor_recv`).  Nondeterministic schedule; after STOP the exact
+    residual is recomputed from the folded-back state, and the drain is
+    re-entered if an in-flight race let STOP fire before the target was
+    truly met — the published certificate is always exact.
+
 The dense uniform terms a dangling push would smear (column = e/n) fold
-into a scalar that all shards share and apply at superstep boundaries, so
+into a scalar that all shards share and apply at epoch boundaries, so
 pushes stay local.  When a batch is too global to drain (work caps), the
 updater falls back to the same warm-started backend solve as
 `update_ranks`.
@@ -33,17 +45,19 @@ updater falls back to the same warm-started backend solve as
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from ..core.pagerank import solve_linear, solve_power
 from ..core.partition import Partition, block_rows
 from ..runtime.driver import TerminationDriver
-from ..runtime.exchange import AllToAllPlan, SparsifiedPlan
+from ..runtime.exchange import AllToAllPlan, ExchangePlan, SparsifiedPlan
+from ..runtime.executor import AsyncShardExecutor
 from .delta import DeltaGraph, EdgeDelta
 from .incremental import (RankState, _check_cert, _exact_residual,
-                          _frontier_contrib, _seed_delta, _view_arrays)
+                          _frontier_contrib, _group_sums, _seed_delta,
+                          _view_arrays)
 
 
 @dataclasses.dataclass
@@ -52,19 +66,38 @@ class ShardedUpdateStats:
 
     path: str                  # "sharded_push" | "solve_linear" | "solve_power"
     p: int
-    supersteps: int
+    supersteps: int            # supersteps, or busiest worker's rounds (async)
     pushes: int                # frontier pops over all shards
     pushes_per_shard: np.ndarray
     exchanges: int             # outbox deliveries that actually shipped
     bytes_moved: int           # modeled payload bytes ((idx, value) pairs)
     seed_l1: float
-    resid_l1: float            # the driver's all-reduced sum at STOP
+    resid_l1: float            # driver's reduced sum (superstep) or the
+                               # exact post-fold ||r||_1 (async)
     cert: float                # resid_l1 / (1 - alpha) — the Fig. 1 bound
-    stop_superstep: int = -1   # superstep at which the monitor issued STOP
+    stop_superstep: int = -1   # superstep/round at which STOP was issued
     solver_iters: int = 0
+    mode: str = "superstep"    # "superstep" | "async"
+    idle_s: float = 0.0        # total worker idle time (async mode only)
+    attempts: int = 1          # async drain entries (>1 = STOP raced mass
+                               # in flight and the drain was re-entered)
 
 
-def _drain_shard(view, arrays, x: np.ndarray, r: np.ndarray,
+def _scatter_add(out: np.ndarray, idx: np.ndarray,
+                 val: np.ndarray) -> None:
+    """``out[idx] += val`` with duplicate indices — the grouped-scatter
+    path PR 1 standardized everywhere else (`np.add.at` is the slow
+    buffered ufunc path), via the `_group_sums` heuristic shared with
+    `incremental._push`.  Exactly equivalent to `np.add.at(out, idx,
+    val)` up to float summation order (tested in
+    tests/test_executor.py)."""
+    if idx.size == 0:
+        return
+    uq, sums = _group_sums(idx, val, out.size)
+    out[uq] += sums
+
+
+def _drain_shard(arrays, x: np.ndarray, r: np.ndarray,
                  outbox: np.ndarray, s: int, e: int, alpha: float,
                  local_target: float, eps_floor: float,
                  c_holder: list) -> int:
@@ -95,8 +128,7 @@ def _drain_shard(view, arrays, x: np.ndarray, r: np.ndarray,
         moved = r[frontier].copy()
         x[frontier] += moved
         r[frontier] = 0.0
-        dst, val, dmass = _frontier_contrib(view, arrays, frontier, moved,
-                                            alpha)
+        dst, val, dmass = _frontier_contrib(arrays, frontier, moved, alpha)
         if dmass != 0.0:
             c_holder[0] += alpha * dmass / n
         if dst.size:
@@ -106,12 +138,65 @@ def _drain_shard(view, arrays, x: np.ndarray, r: np.ndarray,
                                       minlength=bs)
             foreign = ~own
             if foreign.any():
-                np.add.at(outbox, dst[foreign], val[foreign])
+                _scatter_add(outbox, dst[foreign], val[foreign])
+
+
+def _exchange_epoch(plan: ExchangePlan, part: Partition, r: np.ndarray,
+                    outboxes: List[np.ndarray], step: int,
+                    bytes_per_entry: int) -> Tuple[int, int]:
+    """One boundary-residual exchange epoch over every (src, dst) pair:
+    consult the plan, deliver gated outboxes into the owners' rows of `r`,
+    and return ``(exchanges, bytes_moved)`` for the payloads that actually
+    shipped.
+
+    An epoch whose outbox is *empty* still advances the plan's refresh
+    clock (`note_sent`): nothing was withheld from the receiver, so the
+    pair is as refreshed as a full delivery would make it.  Without this,
+    `SparsifiedPlan.last_full` never advances for quiet pairs,
+    `refresh_due` goes permanently true, and the §6 mass-threshold gate is
+    defeated — every later sub-threshold payload ships as a "forced
+    refresh" (the PR 4 foregrounded bugfix; regression-tested in
+    tests/test_executor.py).  Empty epochs ship nothing and count nothing:
+    `exchanges`/`bytes_moved` attribute only real payloads."""
+    exchanges = 0
+    bytes_moved = 0
+    for i in range(part.p):
+        for d in range(part.p):
+            if d == i or not plan.wants(i, d, step):
+                continue
+            s, e = part.block(d)
+            box = outboxes[i][s:e]
+            mass = float(np.abs(box).sum())
+            if mass == 0.0:
+                plan.note_sent(i, d, step)
+                continue
+            if not plan.gate_mass(i, d, step, mass):
+                continue
+            nz = int(np.count_nonzero(box))
+            r[s:e] += box
+            box[:] = 0.0
+            plan.note_sent(i, d, step)
+            plan.on_result(i, d, True)
+            exchanges += 1
+            bytes_moved += nz * (4 + bytes_per_entry)
+    return exchanges, bytes_moved
+
+
+def _make_plan(exchange: str, p: int, l1_target: float,
+               sparsify_thresh: Optional[float],
+               sparsify_refresh_every: int) -> ExchangePlan:
+    if exchange == "sparsified":
+        thresh = (sparsify_thresh if sparsify_thresh is not None
+                  else 0.1 * l1_target / p)
+        return SparsifiedPlan(p, thresh=thresh,
+                              refresh_every=sparsify_refresh_every)
+    return AllToAllPlan(p)
 
 
 def update_ranks_sharded(
         dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
         p: int = 4, tol: float = 1e-8, exchange: str = "allgather",
+        mode: str = "superstep",
         sparsify_thresh: Optional[float] = None,
         sparsify_refresh_every: int = 4,
         pc_max_compute: int = 1, pc_max_monitor: int = 1,
@@ -123,10 +208,12 @@ def update_ranks_sharded(
 
     Mirrors `update_ranks` (same RankState in/out, same exact residual
     bookkeeping, same warm-started fallback) but runs the drain as the
-    runtime-layer cycle described in the module docstring.  On success
-    ``stats.cert`` is the TerminationDriver's all-reduced bound and
-    ``state.cert <= stats.cert`` (state.r is the exactly-maintained
-    residual, whose L1 the driver's sum upper-bounds).
+    runtime-layer cycle described in the module docstring, either as the
+    deterministic superstep loop (``mode="superstep"``) or on real worker
+    threads with zero inter-drain barriers (``mode="async"``).  On success
+    ``stats.cert`` is sound and ``state.cert <= stats.cert`` (state.r is
+    the exactly-maintained residual; the superstep bound is the driver's
+    all-reduced sum, the async bound is the exact post-fold recompute).
     """
     if state.version != dg.version:
         raise ValueError(
@@ -136,6 +223,9 @@ def update_ranks_sharded(
         raise ValueError(f"unknown method {method!r}")
     if exchange not in ("allgather", "sparsified"):
         raise ValueError(f"unknown exchange {exchange!r}")
+    if mode not in ("superstep", "async"):
+        raise ValueError(f"unknown mode {mode!r}; expected 'superstep' "
+                         "or 'async'")
     if delta.new_nodes and state.v is not None:
         raise NotImplementedError(
             "node arrivals with a custom teleport vector are not "
@@ -154,21 +244,83 @@ def update_ranks_sharded(
 
     part = block_rows(n, p)
     l1_target = (1.0 - alpha) * tol
-    local_target = l1_target / (2.0 * p)
     eps_floor = l1_target / max(n, 1)
     max_pushes = int(max_push_factor * n)
+    arrays = _view_arrays(dg)
 
-    if exchange == "sparsified":
-        thresh = (sparsify_thresh if sparsify_thresh is not None
-                  else 0.1 * l1_target / p)
-        plan = SparsifiedPlan(p, thresh=thresh,
-                              refresh_every=sparsify_refresh_every)
-    else:
-        plan = AllToAllPlan(p)
+    if mode == "async":
+        # --- truly asynchronous drain: AsyncShardExecutor worker threads,
+        # per-pair mailboxes, plan consulted per local update, Fig. 1 by
+        # routed messages.  STOP can race mass in flight, so the exact
+        # residual is recomputed after every fold-back and the drain is
+        # re-entered (with fresh protocol state) until it truly holds —
+        # the published certificate is always the exact recompute.
+        def drain_fn(i, s, e, step_target, outbox):
+            holder = [0.0]
+            got = _drain_shard(arrays, x, r, outbox, s, e, alpha,
+                               step_target, eps_floor, holder)
+            return got, holder[0]
+
+        pushes_per_shard = np.zeros(p, dtype=np.int64)
+        exchanges = bytes_moved = 0
+        step = 0
+        stop_round = -1
+        idle_s = 0.0
+        capped = False
+        attempts = 0
+        resid = float(np.abs(r).sum())
+        # always enter at least once (even an already-converged residual
+        # gets its STOP from a routed Fig. 1 transcript, not a shortcut)
+        while (attempts == 0 or resid > l1_target) \
+                and not capped and attempts < 4:
+            attempts += 1
+            plan = _make_plan(exchange, p, l1_target, sparsify_thresh,
+                              sparsify_refresh_every)
+            driver = TerminationDriver(p, pc_max_compute=pc_max_compute,
+                                       pc_max_monitor=pc_max_monitor)
+            # 2x push headroom vs the superstep budget: the fine-grained
+            # schedule pushes a row per *arrival* where the superstep loop
+            # batches a whole exchange generation into one push — same
+            # mass drained, more (cheaper) pops
+            ex = AsyncShardExecutor(
+                part, plan, driver, l1_target=l1_target,
+                bytes_per_entry=bytes_per_entry,
+                max_rounds=100 * max_supersteps,
+                max_total_pushes=2 * max_pushes
+                - int(pushes_per_shard.sum()))
+            res = ex.run(drain_fn, r)
+            pushes_per_shard += res.pushes_per_shard
+            exchanges += res.exchanges
+            bytes_moved += res.bytes_moved
+            step = max(step, int(res.rounds_per_shard.max()))
+            stop_round = res.stop_round
+            idle_s += float(res.idle_s_per_shard.sum())
+            capped = res.capped
+            resid = float(np.abs(r).sum())
+
+        pushes = int(pushes_per_shard.sum())
+        if resid <= l1_target and not capped:
+            return state, ShardedUpdateStats(
+                path="sharded_push", p=p, supersteps=step, pushes=pushes,
+                pushes_per_shard=pushes_per_shard, exchanges=exchanges,
+                bytes_moved=bytes_moved, seed_l1=seed_l1, resid_l1=resid,
+                cert=resid / (1.0 - alpha), stop_superstep=stop_round,
+                mode=mode, idle_s=idle_s, attempts=attempts)
+        return _solver_fallback(
+            dg, state, alpha=alpha, tol=tol, method=method,
+            backend=backend, solver_max_iters=solver_max_iters,
+            stats_kw=dict(p=p, supersteps=step, pushes=pushes,
+                          pushes_per_shard=pushes_per_shard,
+                          exchanges=exchanges, bytes_moved=bytes_moved,
+                          seed_l1=seed_l1, mode=mode, idle_s=idle_s,
+                          attempts=max(attempts, 1)))
+
+    local_target = l1_target / (2.0 * p)
+    plan = _make_plan(exchange, p, l1_target, sparsify_thresh,
+                      sparsify_refresh_every)
     driver = TerminationDriver(p, pc_max_compute=pc_max_compute,
                                pc_max_monitor=pc_max_monitor)
 
-    arrays = _view_arrays(dg)
     outboxes = [np.zeros(n) for _ in range(p)]
     c_pending = [0.0]
     pushes_per_shard = np.zeros(p, dtype=np.int64)
@@ -192,30 +344,17 @@ def update_ranks_sharded(
         for i in range(p):
             s, e = part.block(i)
             pushes_per_shard[i] += _drain_shard(
-                dg, arrays, x, r, outboxes[i], s, e, alpha,
+                arrays, x, r, outboxes[i], s, e, alpha,
                 step_target, eps_floor, c_pending)
         if int(pushes_per_shard.sum()) > max_pushes:
             capped = True
             break
 
         # ---- boundary-residual exchange (ExchangePlan) -----------------
-        for i in range(p):
-            for d in range(p):
-                if d == i or not plan.wants(i, d, step):
-                    continue
-                s, e = part.block(d)
-                box = outboxes[i][s:e]
-                mass = float(np.abs(box).sum())
-                if mass == 0.0:
-                    continue
-                if not plan.gate_mass(i, d, step, mass):
-                    continue
-                nz = int(np.count_nonzero(box))
-                r[s:e] += box
-                box[:] = 0.0
-                plan.note_sent(i, d, step)
-                exchanges += 1
-                bytes_moved += nz * (4 + bytes_per_entry)
+        sent, moved = _exchange_epoch(plan, part, r, outboxes, step,
+                                      bytes_per_entry)
+        exchanges += sent
+        bytes_moved += moved
         # the uniform scalar is shared state: fold it densely once all
         # shards have accumulated into it (an all-reduced scalar, 0 bytes
         # of payload in the model)
@@ -252,7 +391,22 @@ def update_ranks_sharded(
             bytes_moved=bytes_moved, seed_l1=seed_l1, resid_l1=total,
             cert=total / (1.0 - alpha), stop_superstep=stop_superstep)
 
-    # ---- warm-started full solve (same contract as update_ranks) -------
+    return _solver_fallback(
+        dg, state, alpha=alpha, tol=tol, method=method, backend=backend,
+        solver_max_iters=solver_max_iters,
+        stats_kw=dict(p=p, supersteps=step, pushes=pushes,
+                      pushes_per_shard=pushes_per_shard,
+                      exchanges=exchanges, bytes_moved=bytes_moved,
+                      seed_l1=seed_l1))
+
+
+def _solver_fallback(dg: DeltaGraph, state: RankState, *, alpha: float,
+                     tol: float, method: str, backend: str,
+                     solver_max_iters: int, stats_kw: dict
+                     ) -> Tuple[RankState, ShardedUpdateStats]:
+    """Warm-started full solve (same contract as update_ranks): drive the
+    backend solver from the current iterate, recover the exact residual
+    with one host-side apply, and certify."""
     op = dg.operator(alpha, v=state.v)
     solver = solve_linear if method == "linear" else solve_power
     res = solver(op, x0=state.x, tol=0.5 * (1.0 - alpha) * tol,
@@ -262,7 +416,5 @@ def update_ranks_sharded(
     resid = state.resid_l1
     _check_cert(resid, tol, alpha, f"solve_{method}[{backend}]")
     return state, ShardedUpdateStats(
-        path=f"solve_{method}", p=p, supersteps=step, pushes=pushes,
-        pushes_per_shard=pushes_per_shard, exchanges=exchanges,
-        bytes_moved=bytes_moved, seed_l1=seed_l1, resid_l1=resid,
-        cert=resid / (1.0 - alpha), solver_iters=res.iters)
+        path=f"solve_{method}", resid_l1=resid,
+        cert=resid / (1.0 - alpha), solver_iters=res.iters, **stats_kw)

@@ -1,0 +1,266 @@
+"""AsyncShardExecutor + PR 4 satellites: the truly-asynchronous sharded
+drain (worker threads, mailboxes, message-rendered Fig. 1), the
+quiet-pair refresh-clock regression, and the grouped-scatter equivalence.
+"""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (resolves the runtime<->core import cycle)
+from repro.core.partition import block_rows
+from repro.graph.generate import powerlaw_webgraph
+from repro.graph.google import exact_pagerank
+from repro.runtime import (AsyncShardExecutor, PairMailbox, SparsifiedPlan,
+                           TerminationDriver, UniformAccumulator)
+from repro.streaming import (DeltaGraph, EdgeDelta, cold_state,
+                             refresh_residual, update_ranks_sharded)
+from repro.streaming.sharded import _exchange_epoch, _scatter_add
+
+
+# ---------------------------------------------------------------------------
+# satellite (foregrounded): quiet pairs must not bank forced-refresh debt
+# ---------------------------------------------------------------------------
+def test_exchange_epoch_quiet_pair_withholds_subthreshold_mass():
+    """Sparsified §6 gate regression: epochs with an empty outbox advance
+    the refresh clock, so a later sub-threshold payload is actually
+    withheld.  (Before the fix, `last_full` never advanced for quiet
+    pairs, `refresh_due` went permanently true, and every sub-threshold
+    payload shipped as a "forced refresh".)"""
+    p, n = 2, 8
+    part = block_rows(n, p)
+    plan = SparsifiedPlan(p, thresh=0.5, refresh_every=4)
+    r = np.zeros(n)
+    outboxes = [np.zeros(n) for _ in range(p)]
+
+    # ten quiet epochs: nothing ships, but the refresh clock stays current
+    for step in range(10):
+        sent, moved = _exchange_epoch(plan, part, r, outboxes, step, 8)
+        assert sent == 0 and moved == 0
+    assert plan.last_full[0, 1] == 9        # clock advanced on empty epochs
+    assert not plan.refresh_due(0, 1, 10)
+
+    # sub-threshold mass with no refresh due: withheld (zero payloads)
+    outboxes[0][part.block(1)[0]] = 0.1     # mass 0.1 < thresh 0.5
+    sent, moved = _exchange_epoch(plan, part, r, outboxes, 10, 8)
+    assert sent == 0 and moved == 0
+    assert outboxes[0].sum() == 0.1         # retained by the sender
+    assert np.all(r == 0.0)
+
+    # above-threshold mass ships, and only real payloads are attributed
+    outboxes[0][part.block(1)[0]] = 0.7
+    sent, moved = _exchange_epoch(plan, part, r, outboxes, 11, 8)
+    assert sent == 1 and moved == 1 * (4 + 8)
+    assert r.sum() == pytest.approx(0.7)
+    assert plan.last_full[0, 1] == 11
+
+
+def test_exchange_epoch_forced_refresh_still_bounds_delay():
+    """A pair that stays quiet then goes sub-threshold *and overdue* still
+    gets its forced refresh — the bounded-delay guarantee survives the
+    quiet-pair fix."""
+    p, n = 2, 8
+    part = block_rows(n, p)
+    plan = SparsifiedPlan(p, thresh=0.5, refresh_every=4)
+    r = np.zeros(n)
+    outboxes = [np.zeros(n) for _ in range(p)]
+    outboxes[0][part.block(1)[0]] = 0.1
+    # mass sits below threshold; after refresh_every epochs it must ship
+    shipped_at = None
+    for step in range(6):
+        sent, _ = _exchange_epoch(plan, part, r, outboxes, step, 8)
+        if sent:
+            shipped_at = step
+            break
+    assert shipped_at is not None and shipped_at <= 4
+    assert r.sum() == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# satellite: grouped scatter replaces np.add.at (assert equivalence)
+# ---------------------------------------------------------------------------
+def test_scatter_add_matches_np_add_at():
+    rng = np.random.default_rng(5)
+    for n, k in [(50, 0), (50, 10), (64, 200), (1000, 90), (1000, 5000)]:
+        out_a = rng.random(n)
+        out_b = out_a.copy()
+        idx = rng.integers(0, n, k)
+        val = rng.standard_normal(k)
+        _scatter_add(out_a, idx, val)           # exercises both branches
+        np.add.at(out_b, idx, val)
+        np.testing.assert_allclose(out_a, out_b, rtol=1e-12, atol=1e-15)
+
+
+# ---------------------------------------------------------------------------
+# executor primitives
+# ---------------------------------------------------------------------------
+def test_pair_mailbox_deposit_drain_accounting():
+    mb = PairMailbox(4)
+    assert mb.l1() == 0.0
+    mb.deposit(np.array([1.0, -2.0, 0.0, 0.5]))
+    assert mb.l1() == pytest.approx(3.5)
+    mb.deposit(np.array([0.0, 2.0, 0.0, 0.0]))   # cancellation is fine
+    assert mb.l1() == pytest.approx(1.5)
+    r = np.zeros(8)
+    moved = mb.drain_into(r, 2, 6)
+    assert moved == pytest.approx(1.5)
+    np.testing.assert_allclose(r[2:6], [1.0, 0.0, 0.0, 0.5])
+    assert mb.l1() == 0.0 and mb.drain_into(r, 2, 6) == 0.0
+
+
+def test_uniform_accumulator_per_shard_takes():
+    u = UniformAccumulator(3)
+    u.add(0.5)
+    assert u.pending(0) == pytest.approx(0.5)
+    assert u.take(0) == pytest.approx(0.5)
+    assert u.pending(0) == 0.0
+    u.add(0.25)
+    assert u.take(0) == pytest.approx(0.25)
+    assert u.take(1) == pytest.approx(0.75)   # shard 1 never took before
+    assert u.take(2) == pytest.approx(0.75)
+
+
+def test_executor_validates_p_agreement():
+    part = block_rows(10, 2)
+    with pytest.raises(ValueError):
+        AsyncShardExecutor(part, SparsifiedPlan(3, thresh=0.1),
+                           TerminationDriver(2), l1_target=1e-6)
+
+
+def test_executor_synthetic_drain_terminates_and_conserves_mass():
+    """A synthetic absorbing drain (no graph): each round a shard keeps
+    30% of its mass absorbed away, sends 20% to its successor's rows.
+    The executor must STOP via routed messages with every structure folded
+    back (exact residual below the target)."""
+    p, n = 3, 30
+    part = block_rows(n, p)
+    rng = np.random.default_rng(0)
+    r = rng.random(n)
+    target = 1e-6
+
+    def drain_fn(i, s, e, step_target, outbox):
+        own = r[s:e]
+        l1 = float(np.abs(own).sum())
+        if l1 <= step_target:
+            return 0, 0.0
+        moved = own.copy()
+        own[:] = 0.0
+        nxt = (i + 1) % p
+        ns, ne = part.block(nxt)
+        outbox[ns:ns + moved.size] += 0.2 * moved  # 0.5 absorbed
+        r[s:e] += 0.3 * moved
+        return moved.size, 0.0
+
+    from repro.runtime import AllToAllPlan
+    ex = AsyncShardExecutor(part, AllToAllPlan(p), TerminationDriver(p),
+                            l1_target=target, max_rounds=100_000)
+    res = ex.run(drain_fn, r)
+    assert res.stopped and not res.capped
+    assert res.stop_round > 0
+    assert (res.rounds_per_shard >= 1).all()
+    assert res.exchanges > 0 and res.bytes_moved > 0
+    assert float(np.abs(r).sum()) <= 2.0 * target   # folded-back residual
+
+
+def test_executor_round_cap_reports_capped():
+    p, n = 2, 10
+    part = block_rows(n, p)
+    r = np.ones(n)
+
+    def never_converges(i, s, e, step_target, outbox):
+        return 1, 0.0          # claims pushes, removes no mass
+
+    from repro.runtime import AllToAllPlan
+    ex = AsyncShardExecutor(part, AllToAllPlan(p), TerminationDriver(p),
+                            l1_target=1e-12, max_rounds=50)
+    res = ex.run(never_converges, r)
+    assert res.capped and not res.stopped
+    assert float(np.abs(r).sum()) == pytest.approx(n)   # mass conserved
+
+
+def test_executor_push_cap_reports_capped():
+    p, n = 2, 10
+    part = block_rows(n, p)
+    r = np.ones(n)
+
+    def pushy(i, s, e, step_target, outbox):
+        return 1000, 0.0
+
+    from repro.runtime import AllToAllPlan
+    ex = AsyncShardExecutor(part, AllToAllPlan(p), TerminationDriver(p),
+                            l1_target=1e-12, max_total_pushes=100)
+    res = ex.run(pushy, r)
+    assert res.capped and not res.stopped
+
+
+# ---------------------------------------------------------------------------
+# mode="async" end to end (small graphs; the 50k acceptance lives in
+# tests/test_streaming.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("exchange", ["allgather", "sparsified"])
+def test_async_update_sequence_tracks_exact(exchange):
+    g = powerlaw_webgraph(n=2500, target_nnz=20000, n_dangling=12, seed=61)
+    dg = DeltaGraph(g)
+    st = cold_state(dg, tol=1e-9)
+    rng = np.random.default_rng(62)
+    paths = set()
+    for step in range(3):
+        k = int(rng.integers(1, 6))
+        d = EdgeDelta.inserts(rng.integers(0, dg.n, k),
+                              rng.integers(0, dg.n, k))
+        st, stats = update_ranks_sharded(dg, d, st, p=4, tol=1e-7,
+                                         exchange=exchange, mode="async")
+        assert stats.cert <= 1e-7
+        assert stats.mode == "async"
+        paths.add(stats.path)
+        if stats.path == "sharded_push":
+            # async certificates are the exact post-fold residual, so the
+            # maintained state matches the published bound exactly
+            assert st.cert == pytest.approx(stats.cert, rel=1e-12)
+            assert stats.stop_superstep > 0
+    assert "sharded_push" in paths
+    x_ref = exact_pagerank(dg.operator(0.85), tol=1e-13)
+    assert np.abs(st.x - x_ref).sum() < 1.5e-7
+    # the maintained residual is still exact after all mailbox folds
+    r_inc = st.r.copy()
+    refresh_residual(dg, st)
+    assert np.abs(r_inc - st.r).max() < 1e-12
+
+
+def test_async_update_node_arrivals_and_deletions():
+    g = powerlaw_webgraph(n=1500, target_nnz=11000, n_dangling=8, seed=63)
+    dg = DeltaGraph(g)
+    st = cold_state(dg, tol=1e-9)
+    d = EdgeDelta(add_src=np.array([1500, 7]), add_dst=np.array([3, 1500]),
+                  del_src=np.empty(0, np.int64),
+                  del_dst=np.empty(0, np.int64), new_nodes=1)
+    st, stats = update_ranks_sharded(dg, d, st, p=3, tol=1e-7, mode="async")
+    assert st.x.shape == (1501,)
+    u = int(np.argmax(dg.out_degree))
+    row = dg.out_neighbors(u)
+    st, stats = update_ranks_sharded(
+        dg, EdgeDelta.deletes(np.full(row.size, u), row), st, p=3,
+        tol=1e-7, mode="async")
+    assert bool(dg.dangling_mask[u])
+    x_ref = exact_pagerank(dg.operator(0.85), tol=1e-13)
+    assert np.abs(st.x - x_ref).sum() < 1.5e-7
+
+
+def test_async_mode_validation():
+    g = powerlaw_webgraph(n=300, target_nnz=2400, n_dangling=2, seed=9)
+    dg = DeltaGraph(g)
+    st = cold_state(dg, tol=1e-8)
+    with pytest.raises(ValueError):
+        update_ranks_sharded(dg, EdgeDelta.empty(), st, mode="psychic")
+
+
+def test_async_empty_delta_still_runs_fig1_protocol():
+    """An already-converged residual still gets its STOP from a routed
+    Fig. 1 transcript (stop_superstep > 0), not a shortcut."""
+    g = powerlaw_webgraph(n=800, target_nnz=6000, n_dangling=4, seed=13)
+    dg = DeltaGraph(g)
+    st = cold_state(dg, tol=1e-9)
+    st, stats = update_ranks_sharded(dg, EdgeDelta.empty(), st, p=2,
+                                     tol=1e-7, mode="async")
+    assert stats.path == "sharded_push"
+    assert stats.stop_superstep > 0
+    assert stats.attempts == 1
+    assert stats.cert <= 1e-7

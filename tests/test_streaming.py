@@ -392,6 +392,55 @@ def test_rank_server_sharded_updater():
     assert np.abs(snap.x - ref.x).sum() < 2e-7
     with pytest.raises(ValueError):
         RankServer(dg, updater="telepathic")
+    with pytest.raises(ValueError):
+        RankServer(dg, updater="sharded", shard_mode="psychic")
+
+
+def test_rank_server_async_shard_mode():
+    """shard_mode="async": the server's sharded updater drains on the
+    AsyncShardExecutor worker threads and still publishes certified
+    snapshots."""
+    g = powerlaw_webgraph(n=1500, target_nnz=12000, n_dangling=8, seed=66)
+    dg = DeltaGraph(g)
+    srv = RankServer(dg, tol=1e-7, updater="sharded", shards=2,
+                     exchange="sparsified", shard_mode="async")
+    rng = np.random.default_rng(67)
+    srv.ingest(EdgeDelta.inserts(rng.integers(0, dg.n, 3),
+                                 rng.integers(0, dg.n, 3)))
+    stats = srv.apply_pending()
+    assert stats is not None and stats.p == 2 and stats.mode == "async"
+    snap = srv.snapshot()
+    assert snap.version == dg.version and snap.cert <= 1e-7
+    ref = solve_power(dg.operator(0.85), tol=1e-10)
+    assert np.abs(snap.x - ref.x).sum() < 2e-7
+
+
+def test_accept_async_one_percent_delta_50k(accept_graph, accept_delta,
+                                            accept_cold):
+    """ISSUE 4 acceptance: mode="async" certifies the 1% delta on the 50k
+    graph at tol=1e-8 for p in {2, 4} with zero inter-drain barriers —
+    termination only via the routed Fig. 1 messages of the
+    AsyncShardExecutor, the certificate the exact folded-back residual."""
+    from repro.streaming import RankState
+    tol = 1e-8
+    st0 = cold_state(DeltaGraph(accept_graph), tol=0.5 * tol)
+    for p in (2, 4):
+        dg = DeltaGraph(accept_graph)
+        st = RankState(x=st0.x.copy(), r=st0.r.copy(), version=0,
+                       alpha=st0.alpha)
+        st, stats = update_ranks_sharded(dg, accept_delta, st, p=p,
+                                         tol=tol, mode="async")
+        assert stats.path == "sharded_push", (p, stats)
+        assert stats.mode == "async" and stats.p == p
+        assert stats.stop_superstep > 0          # STOP came from the monitor
+        assert stats.cert <= tol
+        # the maintained residual IS the published certificate in async
+        # mode (exact post-fold recompute)
+        assert st.cert == pytest.approx(stats.cert, rel=1e-12)
+        # accept_cold is a tol=1e-9-grade solve: agreement within
+        # cert + reference error
+        l1 = np.abs(st.x - accept_cold).sum()
+        assert l1 <= stats.cert + 1e-8, (p, l1)
 
 
 # ---------------------------------------------------------------------------
@@ -424,6 +473,95 @@ def test_rank_server_inline_updates_and_metadata():
     stale = srv.staleness()
     assert stale["version_lag"] == 0 and stale["pending_deltas"] == 0
     assert srv.apply_pending() is None
+
+
+def test_rank_snapshot_top_k_edge_cases():
+    g = powerlaw_webgraph(n=400, target_nnz=3000, n_dangling=3, seed=25)
+    srv = RankServer(DeltaGraph(g), tol=1e-6)
+    snap = srv.snapshot()
+    # k <= 0: explicit empties (np.argpartition(-x, -1) would partition on
+    # the *last* element instead)
+    for k in (0, -3):
+        ids, scores = snap.top_k(k)
+        assert ids.size == 0 and scores.size == 0
+        assert ids.dtype == np.int64
+    ids, scores = srv.top_k(0)
+    assert ids.size == 0 and scores.size == 0
+    # k > n clamps to n, and k == n is a full argsort
+    ids, scores = snap.top_k(10 * g.n)
+    assert ids.size == g.n
+    assert np.all(np.diff(scores) <= 0)
+    assert set(ids.tolist()) == set(range(g.n))
+
+
+def test_rank_server_concurrent_serving_stress():
+    """Update-while-serve under fire: a daemon updater and concurrent
+    readers (top_k / scores / personalized / staleness).  Every observed
+    snapshot must be intact (read-only unit-sum vector, certified cert,
+    consistent version) and each reader's seq must be monotone."""
+    import threading
+    import time
+    g = powerlaw_webgraph(n=1200, target_nnz=9000, n_dangling=6, seed=26)
+    dg = DeltaGraph(g)
+    tol = 1e-6
+    srv = RankServer(dg, tol=tol, push_frontier_frac=0.6)
+    errors = []
+    stop = threading.Event()
+
+    def reader(kind: int):
+        rng = np.random.default_rng(kind)
+        last_seq = 0
+        try:
+            while not stop.is_set():
+                snap = srv.snapshot()
+                # torn-snapshot checks: immutable, normalized, certified
+                assert not snap.x.flags.writeable
+                assert snap.x.shape == (snap.n,)
+                assert abs(float(snap.x.sum()) - 1.0) < 1e-6
+                assert snap.cert <= tol * 1.01
+                assert snap.seq >= last_seq, "seq went backwards"
+                last_seq = snap.seq
+                if kind % 4 == 0:
+                    ids, scores = srv.top_k(int(rng.integers(0, 8)))
+                    assert np.all(np.diff(scores) <= 0)
+                elif kind % 4 == 1:
+                    ids = rng.integers(0, 1200, 5)
+                    vals = srv.scores(ids)
+                    assert vals.shape == (5,) and np.isfinite(vals).all()
+                elif kind % 4 == 2:
+                    stale = srv.staleness()
+                    assert stale["version_lag"] >= 0
+                    assert stale["pending_deltas"] >= 0
+                    assert stale["cert"] <= tol * 1.01
+                else:
+                    x, cert, _ = srv.personalized(
+                        rng.integers(0, 1200, 2), tol=1e-2)
+                    assert np.isfinite(x).all()
+        except BaseException as exc:   # surfaced to the main thread
+            errors.append(exc)
+            stop.set()
+
+    srv.start(poll_s=0.001)
+    readers = [threading.Thread(target=reader, args=(k,)) for k in range(4)]
+    for t in readers:
+        t.start()
+    rng = np.random.default_rng(27)
+    try:
+        deadline = time.time() + 3.0
+        while time.time() < deadline and not stop.is_set():
+            srv.ingest(EdgeDelta.inserts(rng.integers(0, 1200, 2),
+                                         rng.integers(0, 1200, 2)))
+            time.sleep(0.01)
+    finally:
+        stop.set()
+        for t in readers:
+            t.join(timeout=10)
+        srv.stop()
+    assert not errors, errors[0]
+    assert srv.batches_applied >= 1
+    assert srv.snapshot().seq >= 1
+    with srv._stat_lock:
+        assert srv.queries_served > 0
 
 
 def test_rank_server_threaded_update_while_serve():
