@@ -20,6 +20,11 @@ stream-demo:
 	$(PY) examples/streaming_rank_server.py
 
 # tier-1 gate + the quick benchmark pass that refreshes BENCH_PR<N>.json
-# (currently BENCH_PR4.json; see benchmarks/run.py --out) — run before
-# every PR
-verify: test bench-quick
+# (currently BENCH_PR5.json; see benchmarks/run.py --out) — run before
+# every PR.  The measured suite runtime is embedded in the BENCH file so
+# benchmarks/check_tier1_runtime.py can gate against the best of the last
+# two PRs instead of the frozen PR2 snapshot.
+verify:
+	@start=$$(date +%s) && $(PY) -m pytest -q && \
+	echo $$(( $$(date +%s) - $$start )) > tier1_runtime_s.txt && \
+	$(PY) -m benchmarks.run --quick --tier1-seconds tier1_runtime_s.txt

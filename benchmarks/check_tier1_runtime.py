@@ -1,24 +1,55 @@
-"""CI gate: fail when the tier-1 suite runtime exceeds 1.25x the PR2
-baseline.
+"""CI gate: fail when the tier-1 suite runtime exceeds 1.25x the baseline.
 
     python benchmarks/check_tier1_runtime.py <measured_seconds_file_or_value>
 
-The baseline lives in benchmarks/results/tier1_runtime_baseline.json
-(seconds measured on the PR2 tree in the reference container).  Because
-absolute runtimes differ across machines, the env var TIER1_BASELINE_S
-overrides the stored baseline — CI jobs on faster/slower runners should
-calibrate once and pin it in the workflow.
+Baseline resolution order (first hit wins):
+
+  1. env var TIER1_BASELINE_S — CI runners differ in speed; jobs calibrate
+     once and pin it in the workflow;
+  2. the BEST (minimum) `tier1_seconds` recorded in the last two
+     BENCH_PR<N>.json perf-trajectory files at the repo root (benchmarks/
+     run.py --tier1-seconds embeds it) — so the gate *tightens as the
+     repo gets faster* instead of drifting against the frozen PR2
+     snapshot forever;
+  3. the stored PR2 snapshot
+     (benchmarks/results/tier1_runtime_baseline.json).
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import sys
 from pathlib import Path
 
+REPO_ROOT = Path(__file__).parent.parent
 BASELINE_FILE = Path(__file__).parent / "results" / \
     "tier1_runtime_baseline.json"
 MAX_RATIO = 1.25
+
+
+def _bench_pr_baseline():
+    """Best tier1_seconds of the two most recent BENCH_PR<N>.json files
+    (files without the field — PRs 1-4 predate it — are skipped)."""
+    recs = []
+    for f in REPO_ROOT.glob("BENCH_PR*.json"):
+        m = re.fullmatch(r"BENCH_PR(\d+)\.json", f.name)
+        if not m:
+            continue
+        try:
+            rec = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+        secs = rec.get("tier1_seconds")
+        if secs is not None and float(secs) > 0:
+            recs.append((int(m.group(1)), float(secs), f.name))
+    if not recs:
+        return None
+    recs.sort()
+    last_two = recs[-2:]
+    best = min(last_two, key=lambda t: t[1])
+    return best[1], "min(tier1_seconds of %s)" % ", ".join(
+        name for _, _, name in last_two)
 
 
 def main() -> int:
@@ -34,9 +65,13 @@ def main() -> int:
         baseline = float(env)
         source = "TIER1_BASELINE_S"
     else:
-        rec = json.loads(BASELINE_FILE.read_text())
-        baseline = float(rec["tier1_seconds"])
-        source = f"{BASELINE_FILE.name} ({rec.get('measured_at', '?')})"
+        found = _bench_pr_baseline()
+        if found is not None:
+            baseline, source = found
+        else:
+            rec = json.loads(BASELINE_FILE.read_text())
+            baseline = float(rec["tier1_seconds"])
+            source = f"{BASELINE_FILE.name} ({rec.get('measured_at', '?')})"
 
     limit = MAX_RATIO * baseline
     ratio = measured / baseline if baseline > 0 else float("inf")
@@ -45,8 +80,9 @@ def main() -> int:
           f"[{source}] -> {ratio:.2f}x (limit {MAX_RATIO}x) {verdict}")
     if measured > limit:
         print("tier-1 suite slowed beyond the budget — profile the new "
-              "tests or raise the baseline deliberately in "
-              f"{BASELINE_FILE}")
+              "tests or raise the baseline deliberately (env "
+              "TIER1_BASELINE_S, or the tier1_seconds fields the gate "
+              "reads)")
         return 1
     return 0
 

@@ -5,10 +5,12 @@ beyond-paper studies. Prints ``name,us_per_call,derived`` CSV at the end.
 
 Every run (including --quick) starts with the matvec-backend bench, the
 streaming-update bench, the sharded-runtime bench (sparsified vs
-allgather) and the async-executor bench (async vs superstep shard drains)
-and writes the machine-readable perf-trajectory file (``--out``, default
-BENCH_PR4.json) at the repo root; --quick then skips the slow DES
-paper-table and SPMD staleness studies.
+allgather) and the async-executor bench (async vs superstep shard
+drains, threads vs procpool transports) and writes the machine-readable
+perf-trajectory file (``--out``, default BENCH_PR5.json) at the repo
+root; ``--tier1-seconds`` embeds the measured suite runtime for the
+check_tier1_runtime.py gate; --quick then skips the slow DES paper-table
+and SPMD staleness studies.
 """
 from __future__ import annotations
 
@@ -27,13 +29,23 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR4.json",
+    ap.add_argument("--out", default="BENCH_PR5.json",
                     help="perf-trajectory output (BENCH_PR<N>.json for "
                          "PR N; relative paths land at the repo root)")
+    ap.add_argument("--tier1-seconds", default=None,
+                    help="measured tier-1 suite runtime (seconds, or a "
+                         "file holding it); embedded as `tier1_seconds` "
+                         "so benchmarks/check_tier1_runtime.py can gate "
+                         "against the best of the last two BENCH files")
     args = ap.parse_args()
     out_path = Path(args.out)
     if not out_path.is_absolute():
         out_path = REPO_ROOT / out_path
+    tier1_seconds = None
+    if args.tier1_seconds is not None:
+        raw = args.tier1_seconds
+        tier1_seconds = float(Path(raw).read_text().strip()
+                              if Path(raw).exists() else raw)
 
     csv_rows = [("name", "us_per_call", "derived")]
     t_all = time.time()
@@ -88,7 +100,7 @@ def main() -> None:
         f"cert={sh['cert']:.1e},bytes={sh['bytes_moved']}"))
     brec["sharded"] = shrec
 
-    print("== Async shard executor (async vs superstep, 50k, p=1..8) ==")
+    print("== Async shard executor (threads vs procpool, 50k, p=1..8) ==")
     from benchmarks import async_shard_bench
     arec = async_shard_bench.main()
     a4 = next(r for r in arec["drain_dominated"]
@@ -100,7 +112,18 @@ def main() -> None:
         f"raw={arec['raw_speedup_p4_vs_p1_async']:.2f}x,"
         f"hetero_vs_superstep="
         f"{arec['speedup_async_vs_superstep_hetero_p4']:.2f}x"))
+    pp4 = next(r for r in arec["drain_dominated_burn"]
+               if r["transport"] == "procpool" and r["p"] == 4)
+    csv_rows.append((
+        "procpool_shard",
+        f"{pp4['s'] * 1e6:.0f}",
+        f"burn_p4_vs_p1={arec['procpool_burn_speedup_p4_vs_p1']:.2f}x,"
+        f"threads_burn={arec['threads_burn_speedup_p4_vs_p1']:.2f}x,"
+        f"raw_p4_vs_p1={arec['procpool_raw_speedup_p4_vs_p1']:.2f}x,"
+        f"cores={arec['cores']}"))
     brec["async_shard"] = arec
+    if tier1_seconds is not None:
+        brec["tier1_seconds"] = tier1_seconds
     out_path.write_text(json.dumps(brec, indent=1))
     (RESULTS / "streaming_bench.json").write_text(
         json.dumps(srec, indent=1))

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional
+from typing import List, Optional, Union
 
 import numpy as np
 
@@ -98,8 +98,12 @@ class DESConfig:
     adaptive_max_backoff: int = 16
     sparsify_thresh: float = 0.0      # L1 mass gate; 0 = auto (= tol)
     sparsify_refresh_every: int = 8   # forced full send every k local iters
-    sparsify_top_k: Optional[int] = None  # rows per mass-gated payload
-    #                                 # (None = full fragments; forced
+    sparsify_top_k: Union[int, str, None] = None
+    #                                 # rows per mass-gated payload: an
+    #                                 # int, None (full fragments), or
+    #                                 # "adaptive" (k picked from the
+    #                                 # observed row-delta distribution,
+    #                                 # EWMA-smoothed per pair; forced
     #                                 # refreshes always ship in full)
     # --- barrier model for the synchronous run ---
     barrier_overhead: float = 5e-3
@@ -307,7 +311,7 @@ class AsyncDES:
                     # always ship the full fragment
                     rows_l = None
                     if not plan.refresh_due(i, d, iters[i]):
-                        rows_l = plan.payload_rows(delta_abs)
+                        rows_l = plan.payload_rows(delta_abs, i, d)
                     if rows_l is None:
                         nbytes = self._frag_bytes(i)
                         payload = ("full", new_frag.copy(), version, s, e, i)

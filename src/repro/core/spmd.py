@@ -67,6 +67,7 @@ from .partition import Partition, block_rows
 # submodule reference (see des.py): runtime.driver imports core.termination,
 # so its class attributes may not exist yet during an `import repro.runtime`
 from ..runtime import driver as _runtime_driver
+from ..runtime import transport as _runtime_transport
 from ..runtime.exchange import spmd_exchange
 from ..graph.google import GoogleOperator
 
@@ -89,10 +90,22 @@ class SPMDConfig:
     bsr_impl: str = "auto"        # auto | pallas | interpret | ref
     hub_quantile: float = 0.99    # rows above this row-nnz quantile -> COO
     freeze_lanes: bool = False    # freeze lanes whose monitor counter fired
+    compact_lanes: bool = False   # pow2 lane *compaction* between shard_map
+    #                             # chunks: exit the while_loop once >= half
+    #                             # the lanes are frozen, shrink the (n, nv)
+    #                             # stack to the unfinished lanes (padded to
+    #                             # the next pow2) and re-enter — frozen
+    #                             # lanes stop costing flops instead of
+    #                             # being masked (requires freeze_lanes)
     # --- sparsified schedule (runtime.ExchangePlan, §6 targeting) ---
     sparsify_k: int = 0           # max rows per payload; 0 = auto (bsize/8)
     sparsify_thresh: float = 0.0  # per-row |delta| floor (0 = any change)
     sparsify_refresh_every: int = 16  # forced full all-gather cadence
+    sparsify_adaptive: bool = False   # pick k from the observed row-delta
+    #                                 # distribution (sparsify_k becomes a
+    #                                 # static budget; EWMA-smoothed)
+    sparsify_cover_frac: float = 0.9  # |delta| mass the payload must cover
+    sparsify_ewma: float = 0.5        # new-observation EWMA weight
 
 
 @dataclasses.dataclass
@@ -105,6 +118,7 @@ class SPMDResult:
     comm_bytes_total: int = 0    # payload bytes over the whole run (model)
     rows_sent: int = 0           # sparsified: sparse payload rows shipped
     lane_supersteps: Optional[np.ndarray] = None  # (nv,) first-done step
+    lane_chunks: int = 1         # shard_map chunks run (compact_lanes)
 
 
 def _hash_uniform(seed: int, step: jax.Array, lane: jax.Array) -> jax.Array:
@@ -260,6 +274,9 @@ def col_map_seg(part: Partition, bsize: int, cols: np.ndarray) -> np.ndarray:
 def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
                mesh: Optional[Mesh] = None,
                v: Optional[np.ndarray] = None) -> SPMDResult:
+    if cfg.compact_lanes and not cfg.freeze_lanes:
+        raise ValueError("compact_lanes=True requires freeze_lanes=True "
+                         "(compaction shrinks the stack to unfrozen lanes)")
     p = cfg.p
     n = op.n
     dtype = jnp.dtype(cfg.dtype)
@@ -296,17 +313,21 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
         cfg.schedule, p=p, bsize=bsize, n_pad=n_pad,
         sync_every=cfg.sync_every, sparsify_k=cfg.sparsify_k,
         sparsify_row_thresh=cfg.sparsify_thresh,
-        sparsify_refresh_every=cfg.sparsify_refresh_every)
+        sparsify_refresh_every=cfg.sparsify_refresh_every,
+        sparsify_adaptive=cfg.sparsify_adaptive,
+        sparsify_cover_frac=cfg.sparsify_cover_frac,
+        sparsify_ewma=cfg.sparsify_ewma,
+        # endgame guard: a delta mass at the tolerance scale ships full
+        # payloads so the persistence counters can settle
+        sparsify_endgame_mass=cfg.tol * bsize * nv)
 
-    # device inputs, sharded over 'ue'
+    # device inputs, sharded over 'ue' (lane-independent ones placed once)
     sh = lambda *spec: jax.NamedSharding(mesh, P(*spec))
-    vblk = jax.device_put(packed["vblk"], sh("ue", None, None))
     valid = jax.device_put(packed["valid"], sh("ue", None))
     dang = jax.device_put(
         np.broadcast_to(packed["dang"], (p, n_pad)).copy(), sh("ue", None))
     x0_blocks = (np.full((p, bsize, nv), 1.0 / n, dtype=cfg.dtype)
                  * packed["valid"].astype(cfg.dtype)[:, :, None])
-    x0 = jax.device_put(x0_blocks, sh("ue", None, None))
 
     if use_bsr:
         op_args = tuple(jax.device_put(packed[k], sh("ue", *([None] * nd)))
@@ -316,102 +337,213 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
         op_args = tuple(jax.device_put(packed[k], sh("ue", None))
                         for k in ("src", "wgt", "rid"))
 
-    def body_fn(vblk, valid, dang, x0, *op_args):
-        """Runs on one shard. vblk/x0: (1, bsize, nv), valid: (1, bsize),
-        dang: (1, n_pad); op_args are the shard's operator slice (edge or
-        block form)."""
-        vb_, val_, dg_, myx = vblk[0], valid[0], dang[0], x0[0]
-        i = jax.lax.axis_index("ue")
+    def run_chunk(vblk_np, x0_np, max_steps, compact_exit):
+        """One shard_map while_loop over the lanes of `vblk_np`
+        ((p, bsize, nv_c) teleport blocks) from iterate `x0_np`.  With
+        `compact_exit` the loop also exits once >= half the lanes are
+        done (the pow2-compaction hook); otherwise behavior is the
+        pre-compaction loop verbatim."""
+        nv_c = vblk_np.shape[2]
+        vblk = jax.device_put(np.ascontiguousarray(vblk_np),
+                              sh("ue", None, None))
+        x0 = jax.device_put(np.ascontiguousarray(x0_np),
+                            sh("ue", None, None))
 
-        if use_bsr:
-            from ..kernels.bsr_spmv import bsr_matvec
-            blk_, bcols_, hrow_, hcol_, hval_ = (a[0] for a in op_args)
+        def body_fn(vblk, valid, dang, x0, *op_args):
+            """Runs on one shard. vblk/x0: (1, bsize, nv), valid:
+            (1, bsize), dang: (1, n_pad); op_args are the shard's
+            operator slice (edge or block form)."""
+            vb_, val_, dg_, myx = vblk[0], valid[0], dang[0], x0[0]
+            i = jax.lax.axis_index("ue")
 
-            def pt_apply(view):
-                xb = view.astype(jnp.float32).reshape(n_pad // bm, bm, nv)
-                y = bsr_matvec(blk_, bcols_, xb, impl=bsr_impl)
-                hub = jax.ops.segment_sum(
-                    hval_[:, None] * view.astype(jnp.float32)[hcol_], hrow_,
-                    num_segments=bsize)
-                return (y.reshape(bsize, nv) + hub).astype(view.dtype)
-        else:
-            src_, wgt_, rid_ = (a[0] for a in op_args)
+            if use_bsr:
+                from ..kernels.bsr_spmv import bsr_matvec
+                blk_, bcols_, hrow_, hcol_, hval_ = (a[0] for a in op_args)
 
-            def pt_apply(view):
-                contrib = wgt_[:, None] * view[src_]
-                return jax.ops.segment_sum(contrib, rid_,
-                                           num_segments=bsize)
-
-        def local_update(view):
-            """f_i: new own fragment from the (stale) full view — per lane.
-            The scalar dangling/teleport corrections are masked so the
-            block-aligned padding rows stay exactly zero."""
-            y = alpha * pt_apply(view)
-            dmass = jnp.sum(jnp.where(dg_[:, None], view, 0.0), axis=0)
-            y = y + alpha * dmass[None, :] / n * val_[:, None]
-            if linear:
-                y = y + (1.0 - alpha) * vb_
+                def pt_apply(view):
+                    xb = view.astype(jnp.float32).reshape(
+                        n_pad // bm, bm, nv_c)
+                    y = bsr_matvec(blk_, bcols_, xb, impl=bsr_impl)
+                    hub = jax.ops.segment_sum(
+                        hval_[:, None] * view.astype(jnp.float32)[hcol_],
+                        hrow_, num_segments=bsize)
+                    return (y.reshape(bsize, nv_c) + hub).astype(view.dtype)
             else:
-                y = y + (1.0 - alpha) * jnp.sum(view, axis=0)[None, :] * vb_
-            return y * val_[:, None]
+                src_, wgt_, rid_ = (a[0] for a in op_args)
 
-        def superstep(carry):
-            (view, frag, comm_state, step, pc, mon_pc, lane_done,
-             lane_step, rows_sent, fulls) = carry
-            newfrag = local_update(view)
-            if cfg.freeze_lanes:
-                # frozen lanes keep their fragment — the monitor already
-                # observed persistent global convergence for them
-                newfrag = jnp.where(lane_done[None, :], frag, newfrag)
-            resid = jnp.max(jnp.abs(newfrag - frag), axis=0)   # (nv,)
+                def pt_apply(view):
+                    contrib = wgt_[:, None] * view[src_]
+                    return jax.ops.segment_sum(contrib, rid_,
+                                               num_segments=bsize)
 
-            # ---- communication (ExchangePlan, bulk-sync rendering) -------
-            accept = _hash_uniform(seed, step, i) < q
-            view, comm_state, nsent, nfull = comm(
-                i, view, newfrag, comm_state, step, accept)
+            def local_update(view):
+                """f_i: new own fragment from the (stale) full view — per
+                lane.  The scalar dangling/teleport corrections are masked
+                so the block-aligned padding rows stay exactly zero."""
+                y = alpha * pt_apply(view)
+                dmass = jnp.sum(jnp.where(dg_[:, None], view, 0.0), axis=0)
+                y = y + alpha * dmass[None, :] / n * val_[:, None]
+                if linear:
+                    y = y + (1.0 - alpha) * vb_
+                else:
+                    y = y + (1.0 - alpha) * jnp.sum(view, axis=0)[None, :] \
+                        * vb_
+                return y * val_[:, None]
 
-            # ---- in-loop Fig. 1 protocol (all-reduced bits) --------------
-            pc, mon_pc, done_now = _runtime_driver.TerminationDriver.bits_step(
-                resid < tol, pc, mon_pc, p=p,
-                pc_max_compute=cfg.pc_max_compute,
-                pc_max_monitor=cfg.pc_max_monitor,
-                psum=lambda a: jax.lax.psum(a, "ue"))
-            lane_step = jnp.where(done_now & (lane_step < 0),
-                                  step + 1, lane_step)
-            return (view, newfrag, comm_state, step + 1, pc, mon_pc,
-                    done_now, lane_step, rows_sent + nsent, fulls + nfull)
+            def superstep(carry):
+                (view, frag, comm_state, step, pc, mon_pc, lane_done,
+                 lane_step, rows_sent, fulls) = carry
+                newfrag = local_update(view)
+                if cfg.freeze_lanes:
+                    # frozen lanes keep their fragment — the monitor
+                    # already observed persistent global convergence
+                    newfrag = jnp.where(lane_done[None, :], frag, newfrag)
+                resid = jnp.max(jnp.abs(newfrag - frag), axis=0)  # (nv_c,)
 
-        def cond(carry):
-            _, _, _, step, _, _, lane_done, *_ = carry
-            return jnp.logical_and(~jnp.all(lane_done),
-                                   step < cfg.max_supersteps)
+                # ---- communication (ExchangePlan, bulk-sync) -------------
+                accept = _hash_uniform(seed, step, i) < q
+                view, comm_state, nsent, nfull = comm(
+                    i, view, newfrag, comm_state, step, accept)
 
-        view0 = jax.lax.all_gather(myx, "ue").reshape(n_pad, nv)
-        carry = (view0, myx, init_comm(myx), jnp.asarray(0),
-                 jnp.zeros(nv, jnp.int32), jnp.zeros(nv, jnp.int32),
-                 jnp.zeros(nv, bool), jnp.full(nv, -1, jnp.int32),
-                 jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
-        (view, frag, _, step, pc, mon_pc, lane_done, lane_step,
-         rows_sent, fulls) = jax.lax.while_loop(
-            cond, lambda c: superstep(c), carry)
-        resid = jnp.max(jnp.abs(local_update(view) - frag), axis=0)
-        return (frag[None], step[None], resid[None], lane_step[None],
-                rows_sent[None], fulls[None])
+                # ---- in-loop Fig. 1 protocol (all-reduced bits) ----------
+                # the reduction channel comes from the transport layer:
+                # the mesh psum is the bulk-synchronous rendering of the
+                # same seam the host drivers reduce through
+                pc, mon_pc, done_now = \
+                    _runtime_driver.TerminationDriver.bits_step(
+                        resid < tol, pc, mon_pc, p=p,
+                        pc_max_compute=cfg.pc_max_compute,
+                        pc_max_monitor=cfg.pc_max_monitor,
+                        psum=_runtime_transport.mesh_psum("ue"))
+                lane_step = jnp.where(done_now & (lane_step < 0),
+                                      step + 1, lane_step)
+                return (view, newfrag, comm_state, step + 1, pc, mon_pc,
+                        done_now, lane_step, rows_sent + nsent,
+                        fulls + nfull)
 
-    mapped = shard_map(
-        body_fn, mesh=mesh,
-        in_specs=(P("ue", None, None), P("ue", None), P("ue", None),
-                  P("ue", None, None))
-        + tuple(P("ue", *([None] * (a.ndim - 1))) for a in op_args),
-        out_specs=(P("ue", None, None), P("ue"), P("ue", None),
-                   P("ue", None), P("ue"), P("ue")),
-        check_rep=False,
-    )
-    frags, steps, resids, lane_steps, rows_sent, fulls = \
-        jax.jit(mapped)(vblk, valid, dang, x0, *op_args)
+            def cond(carry):
+                _, _, _, step, _, _, lane_done, *_ = carry
+                keep = jnp.logical_and(~jnp.all(lane_done),
+                                       step < max_steps)
+                if compact_exit:
+                    # the pow2-compaction hook: once >= half the lanes
+                    # are frozen, hand control back to the host so the
+                    # stack can shrink instead of masking dead lanes
+                    keep = jnp.logical_and(
+                        keep,
+                        2 * jnp.sum(lane_done.astype(jnp.int32)) < nv_c)
+                return keep
+
+            view0 = jax.lax.all_gather(myx, "ue").reshape(n_pad, nv_c)
+            carry = (view0, myx, init_comm(myx), jnp.asarray(0),
+                     jnp.zeros(nv_c, jnp.int32), jnp.zeros(nv_c, jnp.int32),
+                     jnp.zeros(nv_c, bool), jnp.full(nv_c, -1, jnp.int32),
+                     jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+            (view, frag, _, step, pc, mon_pc, lane_done, lane_step,
+             rows_sent, fulls) = jax.lax.while_loop(
+                cond, lambda c: superstep(c), carry)
+            resid = jnp.max(jnp.abs(local_update(view) - frag), axis=0)
+            return (frag[None], step[None], resid[None], lane_step[None],
+                    rows_sent[None], fulls[None])
+
+        mapped = shard_map(
+            body_fn, mesh=mesh,
+            in_specs=(P("ue", None, None), P("ue", None), P("ue", None),
+                      P("ue", None, None))
+            + tuple(P("ue", *([None] * (a.ndim - 1))) for a in op_args),
+            out_specs=(P("ue", None, None), P("ue"), P("ue", None),
+                       P("ue", None), P("ue"), P("ue")),
+            check_rep=False,
+        )
+        frags, steps, resids, lane_steps, rows_sent, fulls = \
+            jax.jit(mapped)(vblk, valid, dang, x0, *op_args)
+        return (np.asarray(frags, dtype=np.float64), int(steps.max()),
+                np.asarray(resids), np.asarray(lane_steps,
+                                               dtype=np.int64).max(axis=0),
+                int(np.asarray(rows_sent).sum()),
+                int(np.asarray(fulls).sum()))
+
+    def chunk_bytes(nv_c, steps_c, rows_c, fulls_c):
+        """The per-chunk rendering of the byte model (the static schedules
+        scale with the chunk's lane count; sparsified uses the honest
+        in-loop counters)."""
+        frag_bytes = bsize * np.dtype(cfg.dtype).itemsize
+        if cfg.schedule == "ring":
+            return p * frag_bytes * nv_c * steps_c
+        if cfg.schedule == "allgather_k":
+            return (p * (p - 1) * frag_bytes * nv_c
+                    // cfg.sync_every) * steps_c
+        if cfg.schedule == "sparsified":
+            # (idx, value-lanes) pairs to p-1 peers per sparse payload
+            # row, plus the forced full refreshes (each due step is one
+            # full all-gather)
+            entry = 4 + np.dtype(cfg.dtype).itemsize * nv_c
+            return (rows_c * (p - 1) * entry
+                    + fulls_c * (p - 1) * frag_bytes * nv_c)
+        return p * (p - 1) * frag_bytes * nv_c * steps_c
+
+    compact = bool(cfg.compact_lanes and cfg.freeze_lanes and nv > 1)
+    vblk_full = packed["vblk"]
+    if not compact:
+        frag_mat, supersteps, resid_mat, lane_out, rows_total, fulls_total \
+            = run_chunk(vblk_full, x0_blocks, cfg.max_supersteps, False)
+        comm_total = chunk_bytes(nv, supersteps, rows_total, fulls_total)
+        chunks = 1
+    else:
+        # ---- pow2 lane compaction between shard_map chunks -------------
+        # Run until >= half the active lanes are frozen, then shrink the
+        # (bsize, nv) stack to the survivors padded to the next pow2
+        # (padding duplicates a survivor so the Fig. 1 bits of every
+        # carried lane are real) and re-enter with the current fragments
+        # as x0.  Frozen lanes stop costing flops and exchange bytes;
+        # their results are recorded at the chunk boundary.
+        frag_mat = np.zeros((p, bsize, nv))
+        resid_mat = np.zeros((p, nv), dtype=cfg.dtype)
+        lane_out = np.full(nv, -1, dtype=np.int64)
+        active = list(range(nv))            # real lane id per position
+        real = [True] * nv                  # padding positions are False
+        cur_v, cur_x0 = vblk_full, x0_blocks
+        steps_done = 0
+        comm_total = 0
+        rows_total = fulls_total = 0
+        chunks = 0
+        while True:
+            chunks += 1
+            budget = cfg.max_supersteps - steps_done
+            fr, st, rs, ls, rows_c, fulls_c = run_chunk(
+                cur_v, cur_x0, budget, True)
+            steps_done += st
+            comm_total += chunk_bytes(len(active), st, rows_c, fulls_c)
+            rows_total += rows_c
+            fulls_total += fulls_c
+            done_pos = ls >= 0
+            for pos, lane in enumerate(active):
+                if not real[pos]:
+                    continue
+                finished = bool(done_pos[pos])
+                if finished or steps_done >= cfg.max_supersteps \
+                        or np.all(done_pos):
+                    frag_mat[:, :, lane] = fr[:, :, pos]
+                    resid_mat[:, lane] = rs[:, pos]
+                    if finished:
+                        lane_out[lane] = steps_done - st + int(ls[pos])
+            survivors = [active[pos] for pos in range(len(active))
+                         if real[pos] and not done_pos[pos]]
+            if not survivors or steps_done >= cfg.max_supersteps:
+                break
+            nv_next = 1 << (len(survivors) - 1).bit_length()
+            pad = nv_next - len(survivors)
+            pos_of = {lane: pos for pos, lane in enumerate(active)}
+            keep_pos = [pos_of[ln] for ln in survivors] \
+                + [pos_of[survivors[0]]] * pad
+            cur_v = np.ascontiguousarray(cur_v[:, :, keep_pos])
+            cur_x0 = np.ascontiguousarray(
+                fr[:, :, keep_pos].astype(cfg.dtype))
+            active = survivors + [survivors[0]] * pad
+            real = [True] * len(survivors) + [False] * pad
+        supersteps = steps_done
 
     # un-pack: drop each fragment's block-alignment padding
-    frag_mat = np.asarray(frags, dtype=np.float64)      # (p, bsize, nv)
     x = np.empty((n, nv), dtype=np.float64)
     for i in range(p):
         s, t = part.block(i)
@@ -419,30 +551,8 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
     s_ = x.sum(axis=0)
     x = np.where(s_ > 0, x / np.where(s_ > 0, s_, 1.0), x)
 
-    supersteps = int(steps.max())
-    frag_bytes = bsize * np.dtype(cfg.dtype).itemsize
-    if cfg.schedule == "ring":
-        comm_step = p * frag_bytes * nv                # one permute stage
-        comm_total = comm_step * supersteps
-    elif cfg.schedule == "allgather_k":
-        comm_step = p * (p - 1) * frag_bytes * nv // cfg.sync_every
-        comm_total = comm_step * supersteps
-    elif cfg.schedule == "sparsified":
-        # honest accounting from in-loop counters: (idx, value-lanes) pairs
-        # to p-1 peers per sparse payload row, plus the forced full
-        # refreshes (each due step is one full all-gather)
-        entry = 4 + np.dtype(cfg.dtype).itemsize * nv
-        rows_total = int(np.asarray(rows_sent).sum())
-        fulls_total = int(np.asarray(fulls).sum())      # p per due step
-        comm_total = (rows_total * (p - 1) * entry
-                      + fulls_total * (p - 1) * frag_bytes * nv)
-        comm_step = comm_total // max(supersteps, 1)
-    else:
-        comm_step = p * (p - 1) * frag_bytes * nv      # full all-gather
-        comm_total = comm_step * supersteps
-
-    resid_out = np.asarray(resids)                      # (p, nv)
-    lane_out = np.asarray(lane_steps, dtype=np.int64).max(axis=0)  # (nv,)
+    comm_step = comm_total // max(supersteps, 1)
+    resid_out = np.asarray(resid_mat)                   # (p, nv)
     if nv == 1:
         x = x[:, 0]
         resid_out = resid_out[:, 0]
@@ -450,5 +560,6 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
                       local_resid=resid_out,
                       comm_bytes_per_step=int(comm_step),
                       comm_bytes_total=int(comm_total),
-                      rows_sent=int(np.asarray(rows_sent).sum()),
-                      lane_supersteps=lane_out if nv > 1 else None)
+                      rows_sent=int(rows_total),
+                      lane_supersteps=lane_out if nv > 1 else None,
+                      lane_chunks=chunks)

@@ -19,25 +19,38 @@ three substrates that used to hand-roll it (`core.des`, `core.spmd`,
   driver   — TerminationDriver: drives the pure Fig. 1 machines
              (core.termination) in the message-passing, all-reduced-value,
              and all-reduced-bit renderings.
-  executor — AsyncShardExecutor: the cycle over real worker threads — one
+  transport— the transport-agnostic shard-worker layer: the per-shard
+             cycle (`shard_worker_loop`) written once against the
+             `TransportContext`/`Channel` seam, with two renderings —
+             threads (PairMailbox accumulators, driver lock) and procpool
+             (worker processes over a ShardArena, mailboxes and Fig. 1
+             messages on lock-free shared rings).
+  executor — AsyncShardExecutor: the thread rendering's public face — one
              thread per shard, per-pair boundary-residual mailboxes (no
              superstep barrier), ExchangePlan consulted per local update,
              termination through the driver's message rendering.
 """
-from .state import ShardState
+from .state import ArenaHandle, ShardArena, ShardState
 from .local import LocalSolver, BlockLocalSolver
 from .exchange import (ExchangePlan, AllToAllPlan, RingPlan, AdaptivePlan,
                        SparsifiedPlan, make_plan, spmd_exchange)
 from .driver import TerminationDriver
+from .transport import (Channel, HostAllReduce, ProcPoolShardExecutor,
+                        ReductionChannel, ShmRing, ThreadedShardTransport,
+                        TransportContext, WorkerConfig, default_pool_size,
+                        mesh_psum, shard_worker_loop)
 from .executor import (AsyncRunResult, AsyncShardExecutor, PairMailbox,
                        UniformAccumulator)
 
 __all__ = [
-    "ShardState",
+    "ShardState", "ShardArena", "ArenaHandle",
     "LocalSolver", "BlockLocalSolver",
     "ExchangePlan", "AllToAllPlan", "RingPlan", "AdaptivePlan",
     "SparsifiedPlan", "make_plan", "spmd_exchange",
     "TerminationDriver",
+    "Channel", "TransportContext", "WorkerConfig", "shard_worker_loop",
+    "ThreadedShardTransport", "ProcPoolShardExecutor", "ShmRing",
+    "default_pool_size", "ReductionChannel", "HostAllReduce", "mesh_psum",
     "AsyncRunResult", "AsyncShardExecutor", "PairMailbox",
     "UniformAccumulator",
 ]

@@ -65,8 +65,12 @@ class ExchangePlan:
         always ship full."""
         return True
 
-    def payload_rows(self, delta_abs: np.ndarray) -> Optional[np.ndarray]:
-        """Local row ids to include in the payload (None = full fragment)."""
+    def payload_rows(self, delta_abs: np.ndarray,
+                     i: Optional[int] = None,
+                     d: Optional[int] = None) -> Optional[np.ndarray]:
+        """Local row ids to include in the payload (None = full fragment).
+        `i`/`d` identify the (src, dst) pair for plans that keep per-pair
+        payload statistics (the adaptive sparsified k)."""
         return None
 
     def on_result(self, i: int, d: int, ok: bool) -> None:
@@ -125,19 +129,37 @@ class SparsifiedPlan(ExchangePlan):
     residual mass (||delta||_1 since the last send to that peer) exceeds
     `thresh`, with a forced full refresh every `refresh_every` local
     updates so delays stay bounded; `payload_rows` keeps only the top-k
-    rows by |delta|, so payloads shrink as the sender converges."""
+    rows by |delta|, so payloads shrink as the sender converges.
+
+    `top_k` may be a fixed row count, None (full payloads), or
+    ``"adaptive"``: k is then *read off the observed row-delta
+    distribution* — the smallest k whose top rows cover `cover_frac` of
+    the payload's |delta| mass — and EWMA-smoothed per (src, dst) pair
+    (`ewma` is the new-observation weight), so a sender whose residual
+    concentrates ships a few heavy rows while a sender with flat deltas
+    ships proportionally more.  The forced full refresh is untouched
+    (`refresh_due` payloads skip `payload_rows` entirely), so the
+    bounded-delay property holds for any adaptive trajectory."""
 
     name = "sparsified"
 
     def __init__(self, p: int, thresh: float, refresh_every: int = 8,
-                 top_k: Optional[int] = None):
+                 top_k=None, cover_frac: float = 0.9, ewma: float = 0.5):
         super().__init__(p)
         assert refresh_every >= 1
+        if top_k == "adaptive":
+            assert 0.0 < cover_frac <= 1.0 and 0.0 < ewma <= 1.0
+        elif top_k is not None:
+            top_k = int(top_k)
         self.thresh = float(thresh)
         self.refresh_every = int(refresh_every)
         self.top_k = top_k
+        self.cover_frac = float(cover_frac)
+        self.ewma = float(ewma)
         # iteration of the last *full* send per (src, dst) pair
         self.last_full = np.zeros((p, p), dtype=np.int64)
+        # per-pair EWMA of the mass-coverage row count (0 = no data yet)
+        self._k_ewma = np.zeros((p, p))
 
     def refresh_due(self, i: int, d: int, it: int) -> bool:
         return it - self.last_full[i, d] >= self.refresh_every
@@ -145,8 +167,33 @@ class SparsifiedPlan(ExchangePlan):
     def gate_mass(self, i: int, d: int, it: int, mass: float) -> bool:
         return mass > self.thresh or self.refresh_due(i, d, it)
 
-    def payload_rows(self, delta_abs: np.ndarray) -> Optional[np.ndarray]:
-        if self.top_k is None or self.top_k >= delta_abs.size:
+    def payload_rows(self, delta_abs: np.ndarray,
+                     i: Optional[int] = None,
+                     d: Optional[int] = None) -> Optional[np.ndarray]:
+        if self.top_k is None:
+            return None
+        if self.top_k == "adaptive":
+            total = float(delta_abs.sum())
+            if total <= 0.0:
+                return None
+            order = np.argsort(-delta_abs, kind="stable")
+            csum = np.cumsum(delta_abs[order])
+            k_now = int(np.searchsorted(
+                csum, self.cover_frac * total, side="left")) + 1
+            if i is None or d is None:
+                k = k_now                # pair-less call: no profile state
+            else:
+                prev = self._k_ewma[i, d]
+                cur = (float(k_now) if prev == 0.0
+                       else self.ewma * k_now + (1.0 - self.ewma) * prev)
+                self._k_ewma[i, d] = cur
+                # ceil so the smoothed k never under-covers by rounding
+                k = int(np.ceil(cur))
+            k = max(1, min(k, delta_abs.size))
+            if k >= delta_abs.size:
+                return None
+            return np.sort(order[:k])
+        if self.top_k >= delta_abs.size:
             return None
         idx = np.argpartition(-delta_abs, self.top_k - 1)[: self.top_k]
         return np.sort(idx)
@@ -159,7 +206,7 @@ class SparsifiedPlan(ExchangePlan):
 def make_plan(policy: str, p: int, *, cancel_limit: int = 3,
               max_backoff: int = 16, thresh: float = 0.0,
               refresh_every: int = 8,
-              top_k: Optional[int] = None) -> ExchangePlan:
+              top_k=None) -> ExchangePlan:
     """Plan factory keyed by the DES comm_policy names."""
     if policy == "all_to_all":
         return AllToAllPlan(p)
@@ -183,7 +230,11 @@ SPMD_SCHEDULES = ("allgather", "allgather_k", "ring", "sparsified")
 def spmd_exchange(schedule: str, *, p: int, bsize: int, n_pad: int,
                   sync_every: int = 4, sparsify_k: int = 0,
                   sparsify_row_thresh: float = 0.0,
-                  sparsify_refresh_every: int = 16):
+                  sparsify_refresh_every: int = 16,
+                  sparsify_adaptive: bool = False,
+                  sparsify_cover_frac: float = 0.9,
+                  sparsify_ewma: float = 0.5,
+                  sparsify_endgame_mass: float = 0.0):
     """Build the jax rendering of an ExchangePlan for one shard_map loop.
 
     Returns ``(init_state, comm)``:
@@ -204,6 +255,21 @@ def spmd_exchange(schedule: str, *, p: int, bsize: int, n_pad: int,
     by per-row |delta| (summed over lanes) above `sparsify_row_thresh`,
     all-gathered as (idx, val) pairs, plus a forced full all-gather every
     `sparsify_refresh_every` supersteps (the bounded-delay guarantee).
+
+    With ``sparsify_adaptive=True`` the per-payload row count is picked
+    from the observed row-delta distribution instead of the fixed k:
+    `sparsify_k` (auto: ~bsize/8) becomes a static *budget* (XLA needs
+    static shapes), and within it the effective count is the smallest m
+    whose top rows cover `sparsify_cover_frac` of the shard's total
+    |delta| mass, EWMA-smoothed across supersteps (`sparsify_ewma` is the
+    new-observation weight, carried in comm_state).  Rows beyond the
+    adaptive m are masked out of the payload; the forced full refresh is
+    unchanged, so the bounded-delay property is preserved verbatim.
+    `sparsify_endgame_mass` guards the endgame: once a shard's total
+    |delta| falls to that scale (callers pass ~bsize * nv * tol), the
+    payload reverts to the full budget — a coverage fraction of a
+    tolerance-sized mass would otherwise withhold exactly the rows the
+    persistence counters need to see settle, stalling termination.
     """
     import jax
     import jax.numpy as jnp
@@ -277,14 +343,43 @@ def spmd_exchange(schedule: str, *, p: int, bsize: int, n_pad: int,
     row_thresh = float(sparsify_row_thresh)
     refresh = max(int(sparsify_refresh_every), 1)
     owner_off = np.arange(p, dtype=np.int32)[:, None] * bsize   # (p, 1)
+    cover = float(sparsify_cover_frac)
+    ewma_w = float(sparsify_ewma)
+    endgame_mass = float(sparsify_endgame_mass)
 
     def init_state(myfrag):
+        if sparsify_adaptive:
+            # (last-shipped fragment, EWMA of the mass-coverage count —
+            # start at the full budget so the first payloads are not
+            # under-sized before any profile exists)
+            return (myfrag, jnp.asarray(float(k), jnp.float32))
         return myfrag            # the fragment as last shipped to peers
 
-    def comm(i, view, newfrag, last_sent, step, accept):
+    def comm(i, view, newfrag, state, step, accept):
+        if sparsify_adaptive:
+            last_sent, k_ewma = state
+        else:
+            last_sent, k_ewma = state, None
         delta = jnp.sum(jnp.abs(newfrag - last_sent), axis=-1)  # (bsize,)
         top_vals, top_idx = jax.lax.top_k(delta, k)
         row_ok = top_vals > row_thresh                          # (k,)
+        if sparsify_adaptive:
+            # adaptive k: smallest m whose top rows cover `cover` of the
+            # shard's total |delta| mass (k stays the static budget);
+            # EWMA-smoothed so one spiky superstep doesn't whip the
+            # payload size around
+            total = jnp.sum(delta)
+            csum = jnp.cumsum(top_vals)
+            m_now = jnp.sum((csum < cover * total).astype(jnp.int32)) + 1
+            m_now = jnp.minimum(m_now, k).astype(jnp.float32)
+            k_ewma = jnp.where(total > 0,
+                               ewma_w * m_now + (1.0 - ewma_w) * k_ewma,
+                               k_ewma)
+            m_eff = jnp.ceil(k_ewma).astype(jnp.int32)
+            # endgame: a tolerance-scale delta mass ships at full budget
+            # (withholding any of it stalls the persistence counters)
+            m_eff = jnp.where(total <= endgame_mass, k, m_eff)
+            row_ok = jnp.logical_and(row_ok, jnp.arange(k) < m_eff)
         nrows = jnp.sum(row_ok.astype(jnp.int32))
         due = jnp.mod(step, refresh) == refresh - 1
 
@@ -317,5 +412,6 @@ def spmd_exchange(schedule: str, *, p: int, bsize: int, n_pad: int,
         # would let a shard converge on a stale view.
         view = jnp.where(jnp.logical_or(accept, due), updated, view)
         rows_sent = jnp.where(due, zero, nrows)
-        return view, last_sent, rows_sent, due.astype(jnp.int32)
+        state = (last_sent, k_ewma) if sparsify_adaptive else last_sent
+        return view, state, rows_sent, due.astype(jnp.int32)
     return init_state, comm

@@ -3,8 +3,8 @@
 Everything under `repro.runtime` so far *models* asynchrony: the DES engine
 simulates it event-by-event, the SPMD loop batches it into supersteps, and
 the sharded streaming updater ran its p shard drains in a sequential
-superstep loop on one host thread.  This module makes the asynchrony real:
-each shard's local drain runs on its own worker thread and the three
+superstep loop on one host thread.  This executor makes the asynchrony
+real: each shard's local drain runs on its own worker thread and the three
 synchronizing phases of the paper's cycle are gone —
 
   * no exchange barrier: residual mass a shard diffuses into rows another
@@ -47,109 +47,27 @@ Determinism caveat: thread scheduling makes the async schedule — rounds,
 exchange epochs, push counts — run-to-run nondeterministic.  The superstep
 loop is preserved as the deterministic golden reference; the *results* of
 both agree to within the certified tolerance (docs/runtime.md).
+
+Since PR 5 the cycle itself — intake, hysteresis-gated drain, §6-gated
+exchange, Fig. 1 report — lives in `runtime/transport.py`
+(`shard_worker_loop`), written once against the `TransportContext` seam.
+This class is the thread rendering (`ThreadedShardTransport` under the
+hood, behavior-preserving and golden-gated by tests/test_executor.py);
+`transport.ProcPoolShardExecutor` is the shared-memory process-pool
+rendering whose raw wall-clock escapes the GIL.
 """
 from __future__ import annotations
 
-import dataclasses
-import threading
-import time
-from typing import Callable, List, Optional, Tuple
+from typing import Optional
 
 import numpy as np
 
 from ..core.partition import Partition
 from .driver import TerminationDriver
 from .exchange import ExchangePlan
-
-# drain_fn(i, s, e, step_target, outbox) -> (pushes, dangling_mass):
-# drain shard i's own rows [s, e) until their L1 is <= step_target,
-# accumulating foreign-row contributions into `outbox` (addressed by
-# global row id) and returning any mass destined for the dense uniform
-# column as `dangling_mass` (the executor owns the shared scalar).
-DrainFn = Callable[[int, int, int, float, np.ndarray], Tuple[int, float]]
-
-
-class PairMailbox:
-    """Lock-protected boundary-residual accumulator for one (src, dst)
-    pair.  Deposits add the sender's outbox block; the owner folds the
-    buffer into its own rows.  `l1()` is a lock-free read of the last
-    computed mass (stale reads only ever *over*-count mass that was just
-    drained, never under-count mass that was deposited before the last
-    `deposit` returned — deposits publish the new l1 under the lock)."""
-
-    __slots__ = ("lock", "buf", "_l1")
-
-    def __init__(self, block_size: int):
-        self.lock = threading.Lock()
-        self.buf = np.zeros(block_size)
-        self._l1 = 0.0
-
-    def deposit(self, block: np.ndarray) -> None:
-        with self.lock:
-            self.buf += block
-            self._l1 = float(np.abs(self.buf).sum())
-
-    def drain_into(self, r: np.ndarray, s: int, e: int) -> float:
-        """Fold the buffer into r[s:e] (the owner's rows); returns the L1
-        mass moved (0.0 on the lock-free empty fast path)."""
-        if self._l1 == 0.0:
-            return 0.0
-        with self.lock:
-            moved = self._l1
-            if moved != 0.0:
-                r[s:e] += self.buf
-                self.buf[:] = 0.0
-                self._l1 = 0.0
-        return moved
-
-    def l1(self) -> float:
-        return self._l1
-
-
-class UniformAccumulator:
-    """The shared uniform-column scalar (dangling pushes smear column e/n).
-
-    Senders `add` mass as they drain; each shard `take`s the delta since it
-    last looked and applies it densely to its own rows only — the dense
-    fold is sharded too, so no thread ever touches foreign rows.  Pending
-    (added but not yet taken) mass is part of the sender-side residual
-    accounting: `pending(i) * block_size` joins shard i's reported value.
-    """
-
-    def __init__(self, p: int):
-        self._lock = threading.Lock()
-        self._total = 0.0
-        self._seen = np.zeros(p)
-
-    def add(self, v: float) -> None:
-        if v != 0.0:
-            with self._lock:
-                self._total += v
-
-    def take(self, i: int) -> float:
-        with self._lock:
-            d = self._total - float(self._seen[i])
-            self._seen[i] = self._total
-        return d
-
-    def pending(self, i: int) -> float:
-        return self._total - float(self._seen[i])
-
-
-@dataclasses.dataclass
-class AsyncRunResult:
-    """Transcript of one `AsyncShardExecutor.run` (telemetry only — the
-    residual itself is folded back into `r` before run() returns)."""
-
-    stopped: bool                   # the monitor issued STOP
-    capped: bool                    # a round/push cap fired first
-    rounds_per_shard: np.ndarray    # local updates each worker executed
-    pushes_per_shard: np.ndarray
-    exchanges: int                  # mailbox deposits that actually shipped
-    bytes_moved: int                # modeled payload bytes ((idx, value))
-    stop_round: int                 # issuing shard's round at STOP (-1)
-    idle_s_per_shard: np.ndarray    # time spent parked waiting for mail
-    wall_s: float
+from .transport import (AsyncRunResult, DrainFn, PairMailbox,  # noqa: F401
+                        ThreadedShardTransport, UniformAccumulator,
+                        WorkerConfig)
 
 
 class AsyncShardExecutor:
@@ -162,18 +80,6 @@ class AsyncShardExecutor:
     the actual local update as a `DrainFn`, so it stays independent of the
     problem being iterated (the streaming updater passes its
     Gauss-Southwell sweep; tests pass synthetic kernels).
-
-    One *round* = one intake + (gated) local update + one Fig. 1
-    checkConvergence().  The ExchangePlan runs on its own clock of *local
-    updates*: drain rounds tick it, idle-converged spin rounds do not (a
-    spin-round clock would force-ship every withheld sub-threshold
-    payload within `refresh_every * idle_sleep`, defeating the §6 gate),
-    and a round parked *above* the convergence target with the plan
-    withholding still ticks — that keeps the forced-refresh bound live,
-    so significant parked mass always ships within `refresh_every` local
-    updates.  Converged shards may withhold sub-threshold mass
-    indefinitely: it is counted in their reported value, so the
-    certificate stays sound.
     """
 
     def __init__(self, part: Partition, plan: ExchangePlan,
@@ -197,246 +103,22 @@ class AsyncShardExecutor:
         self.drain_frac = float(drain_frac)
         self.hysteresis = float(hysteresis)
 
-    # ------------------------------------------------------------------
     def run(self, drain_fn: DrainFn, r: np.ndarray) -> AsyncRunResult:
         """Drive the drains until STOP or a cap; on return every mailbox,
         outbox and pending uniform delta has been folded back into `r`, so
-        `r` is again the one exactly-maintained residual."""
-        p, part = self.p, self.part
-        n = part.n
-        t0 = time.perf_counter()
+        `r` is again the one exactly-maintained residual.
 
-        mail = [[PairMailbox(part.block(d)[1] - part.block(d)[0])
-                 if d != i else None for d in range(p)] for i in range(p)]
-        outboxes = [np.zeros(n) for _ in range(p)]
-        uniform = UniformAccumulator(p)
-        driver_lock = threading.Lock()
-        stat_lock = threading.Lock()
-        stop_evt = threading.Event()
-
-        rounds = np.zeros(p, dtype=np.int64)
-        pushes = np.zeros(p, dtype=np.int64)
-        idle_s = np.zeros(p)
-        # stale-readable last reported values: the sliding drain target is
-        # a fraction of their sum (no point draining own rows orders of
-        # magnitude below the mass peers still hold)
-        last_values = np.array([float(np.abs(r[s:e]).sum())
-                                for s, e in (part.block(i)
-                                             for i in range(p))])
-        shared = dict(exchanges=0, bytes_moved=0, stop_round=-1,
-                      capped=False)
-        errors: List[Optional[BaseException]] = [None] * p
-
-        def worker(i: int) -> None:
-            s, e = part.block(i)
-            bs = e - s
-            conv_target = self.l1_target * (bs / n) if n else self.l1_target
-            drain_floor = 0.5 * conv_target
-            outbox = outboxes[i]
-            peers = [d for d in range(p) if d != i]
-            inboxes = [mail[j][i] for j in range(p) if j != i]
-            # cached L1s of the two O(n) structures this worker owns —
-            # only intake/drain/exchange can change them, so idle rounds
-            # cost O(p) instead of O(n)
-            own_l1 = float(np.abs(r[s:e]).sum())
-            outbox_l1 = 0.0
-            own_dirty = outbox_dirty = False
-            it = 0            # raw rounds (spin included): caps, telemetry
-            updates = 0       # *local updates*: the ExchangePlan's clock
-            tick_pending = False
-            try:
-                while not stop_evt.is_set():
-                    if it >= self.max_rounds:
-                        shared["capped"] = True
-                        stop_evt.set()
-                        break
-                    it += 1
-                    progressed = False
-
-                    # -- receive: fold incoming mail + my uniform share.
-                    #    A nonzero intake RETRACTS convergence before the
-                    #    mass leaves the sender's books: once drained, the
-                    #    sender's next value read no longer sees it, and
-                    #    this shard's own report only happens at round end
-                    #    — without the retraction, STOP could ride this
-                    #    shard's stale CONVERGE flag while a whole exchange
-                    #    generation sits uncounted in its rows. ------------
-                    if (uniform.pending(i) != 0.0
-                            or any(mb.l1() != 0.0 for mb in inboxes)):
-                        with driver_lock:
-                            if not self.driver.stopped:
-                                msg = self.driver.ue_step(i, False)
-                                if msg is not None:
-                                    self.driver.monitor_recv(i, msg)
-                        for mb in inboxes:
-                            if mb.drain_into(r, s, e) != 0.0:
-                                progressed = True
-                                own_dirty = True
-                        dc = uniform.take(i)
-                        if dc != 0.0:
-                            r[s:e] += dc
-                            progressed = True
-                            own_dirty = True
-
-                    # -- local update: drain own rows to a sliding target.
-                    #    The drain is gated by a hysteresis band: entering
-                    #    the coarse-to-fine ladder for every trickling
-                    #    arrival pushes near-floor rows over and over (the
-                    #    superstep loop batches a whole exchange generation
-                    #    per ladder), so arrivals accumulate until own mass
-                    #    meaningfully exceeds the sliding target.  At the
-                    #    floor the band collapses — parked mass stays at
-                    #    <= drain_floor = conv_target/2, which keeps the
-                    #    convergence check reachable (no livelock). --------
-                    approx_total = float(last_values.sum())
-                    step_target = max(drain_floor,
-                                      self.drain_frac * approx_total / p)
-                    if own_dirty:
-                        own_l1 = float(np.abs(r[s:e]).sum())
-                        own_dirty = False
-                    did_drain = False
-                    if own_l1 > (self.hysteresis * step_target
-                                 if step_target > drain_floor
-                                 else drain_floor):
-                        got, c_add = drain_fn(i, s, e, step_target, outbox)
-                        uniform.add(c_add)
-                        own_dirty = outbox_dirty = True
-                        did_drain = True
-                        if got:
-                            pushes[i] += got
-                            progressed = True
-                    if (self.max_total_pushes is not None
-                            and int(pushes.sum()) > self.max_total_pushes):
-                        shared["capped"] = True
-                        stop_evt.set()
-                        break
-
-                    # -- exchange: plan consulted per *local update*, not
-                    #    per spin round — idle-converged rounds must not
-                    #    tick the §6 refresh clock (they would force-ship
-                    #    every withheld sub-threshold payload within
-                    #    refresh_every * idle_sleep).  A blocked-but-
-                    #    unconverged round (tick_pending, set below) still
-                    #    ticks: mass parked above the convergence target
-                    #    keeps the bounded-delay escape hatch live. --------
-                    if did_drain or tick_pending:
-                        updates += 1
-                        tick_pending = False
-                        if outbox_dirty:
-                            outbox_l1 = float(np.abs(outbox).sum())
-                            outbox_dirty = False
-                        for d in peers:
-                            if not self.plan.wants(i, d, updates):
-                                continue
-                            if outbox_l1 == 0.0:
-                                # nothing pending anywhere: the receiver's
-                                # copy already reflects everything this
-                                # shard produced, so the epoch counts as a
-                                # (zero-byte) refresh — quiet pairs must
-                                # not bank forced-refresh debt
-                                self.plan.note_sent(i, d, updates)
-                                continue
-                            sd, ed = part.block(d)
-                            box = outbox[sd:ed]
-                            mass = float(np.abs(box).sum())
-                            if mass == 0.0:
-                                self.plan.note_sent(i, d, updates)
-                                continue
-                            if not self.plan.gate_mass(i, d, updates, mass):
-                                continue
-                            nz = int(np.count_nonzero(box))
-                            mail[i][d].deposit(box)
-                            box[:] = 0.0
-                            outbox_dirty = True
-                            self.plan.note_sent(i, d, updates)
-                            self.plan.on_result(i, d, True)
-                            with stat_lock:
-                                shared["exchanges"] += 1
-                                shared["bytes_moved"] += \
-                                    nz * (4 + self.bytes_per_entry)
-                            progressed = True
-
-                    # -- my residual value: everything I am accountable
-                    #    for right now (the conservation invariant): own
-                    #    rows, undelivered outbox, mailbox mass *I* put in
-                    #    flight, and my rows' share of the pending uniform.
-                    #    In-flight mass is counted by the SENDER — it only
-                    #    leaves my books when the receiver has folded it
-                    #    into rows the receiver itself counts, so a deposit
-                    #    can never go unreported at the instant the monitor
-                    #    evaluates STOP (the transient double-count while
-                    #    the receiver drains is sound: it can only delay
-                    #    convergence, never fake it) -----------------------
-                    if own_dirty:
-                        own_l1 = float(np.abs(r[s:e]).sum())
-                        own_dirty = False
-                    if outbox_dirty:
-                        outbox_l1 = float(np.abs(outbox).sum())
-                        outbox_dirty = False
-                    value = own_l1 + outbox_l1 + abs(uniform.pending(i)) * bs
-                    for d in peers:
-                        value += mail[i][d].l1()
-                    last_values[i] = value
-
-                    # -- Fig. 1, message rendering ----------------------
-                    verdict = value <= conv_target
-                    with driver_lock:
-                        if not self.driver.stopped:
-                            msg = self.driver.ue_step(i, verdict)
-                            if msg is not None and \
-                                    self.driver.monitor_recv(i, msg):
-                                shared["stop_round"] = it
-                                stop_evt.set()
-                                break
-                    if not verdict and not progressed:
-                        # parked above target with the plan withholding:
-                        # count the next round as a local update so the
-                        # forced refresh can fire (no livelock)
-                        tick_pending = True
-
-                    # -- idle backoff: park until mail can have arrived --
-                    if not progressed:
-                        t_idle = time.perf_counter()
-                        stop_evt.wait(self.idle_sleep)
-                        idle_s[i] += time.perf_counter() - t_idle
-            except BaseException as exc:        # pragma: no cover - reraised
-                errors[i] = exc
-                stop_evt.set()
-            finally:
-                rounds[i] = it
-
-        threads = [threading.Thread(target=worker, args=(i,),
-                                    name=f"shard-drain-{i}", daemon=True)
-                   for i in range(p)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-
-        # fold every in-flight structure back into r: the caller's r is
-        # again the exactly-maintained residual (mass conservation)
-        for i in range(p):
-            for d in range(p):
-                if d != i:
-                    sd, ed = part.block(d)
-                    mail[i][d].drain_into(r, sd, ed)
-            box = outboxes[i]
-            nzr = np.flatnonzero(box)
-            if nzr.size:
-                r[nzr] += box[nzr]
-            s, e = part.block(i)
-            dc = uniform.take(i)
-            if dc != 0.0:
-                r[s:e] += dc
-
-        for exc in errors:
-            if exc is not None:
-                raise exc
-
-        return AsyncRunResult(
-            stopped=self.driver.stopped and not shared["capped"],
-            capped=shared["capped"], rounds_per_shard=rounds,
-            pushes_per_shard=pushes, exchanges=shared["exchanges"],
-            bytes_moved=shared["bytes_moved"],
-            stop_round=shared["stop_round"], idle_s_per_shard=idle_s,
-            wall_s=time.perf_counter() - t0)
+        The transport is built here, not in __init__, so the knob
+        attributes stay live until run() — callers (and tests) that tune
+        `ex.max_rounds` etc. after construction keep the PR 4 semantics.
+        """
+        transport = ThreadedShardTransport(
+            self.part, self.plan, self.driver, WorkerConfig(
+                l1_target=float(self.l1_target),
+                bytes_per_entry=int(self.bytes_per_entry),
+                max_rounds=int(self.max_rounds),
+                max_total_pushes=self.max_total_pushes,
+                idle_sleep=float(self.idle_sleep),
+                drain_frac=float(self.drain_frac),
+                hysteresis=float(self.hysteresis)))
+        return transport.run(drain_fn, r)

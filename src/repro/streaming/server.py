@@ -87,13 +87,21 @@ class RankServer:
                  updater: str = "incremental",
                  shards: int = 4,
                  exchange: str = "allgather",
-                 shard_mode: str = "superstep"):
+                 shard_mode: str = "superstep",
+                 shard_transport: str = "threads",
+                 shard_workers: Optional[int] = None):
         if updater not in ("incremental", "sharded"):
             raise ValueError(f"unknown updater {updater!r}; expected "
                              "'incremental' or 'sharded'")
         if shard_mode not in ("superstep", "async"):
             raise ValueError(f"unknown shard_mode {shard_mode!r}; expected "
                              "'superstep' or 'async'")
+        if shard_transport not in ("threads", "procpool"):
+            raise ValueError(f"unknown shard_transport {shard_transport!r};"
+                             " expected 'threads' or 'procpool'")
+        if shard_transport == "procpool" and shard_mode != "async":
+            raise ValueError("shard_transport='procpool' requires "
+                             "shard_mode='async'")
         self.dg = dg
         self.alpha = alpha
         self.tol = tol
@@ -105,12 +113,16 @@ class RankServer:
         # runtime-layer updater (streaming.sharded) — p shards exchanging
         # boundary residual under `exchange` ("allgather" | "sparsified"),
         # certificate via the Fig. 1 TerminationDriver.  shard_mode="async"
-        # runs the drains on AsyncShardExecutor worker threads (no
-        # superstep barrier; see docs/runtime.md).
+        # runs the drains with no superstep barrier on `shard_transport`:
+        # "threads" (AsyncShardExecutor worker threads) or "procpool"
+        # (worker processes over a shared-memory ShardArena,
+        # `shard_workers` sizing the pool; see docs/runtime.md).
         self.updater = updater
         self.shards = shards
         self.exchange = exchange
         self.shard_mode = shard_mode
+        self.shard_transport = shard_transport
+        self.shard_workers = shard_workers
 
         # working buffer (updater-owned) + cold certification
         self._state: RankState = cold_state(
@@ -181,7 +193,8 @@ class RankServer:
                 self._state, stats = update_ranks_sharded(
                     self.dg, merged, self._state, tol=self.tol,
                     p=self.shards, exchange=self.exchange,
-                    mode=self.shard_mode,
+                    mode=self.shard_mode, transport=self.shard_transport,
+                    n_workers=self.shard_workers,
                     backend=self.backend, method=self.method)
             else:
                 self._state, stats = update_ranks(

@@ -54,6 +54,8 @@ from ..core.partition import Partition, block_rows
 from ..runtime.driver import TerminationDriver
 from ..runtime.exchange import AllToAllPlan, ExchangePlan, SparsifiedPlan
 from ..runtime.executor import AsyncShardExecutor
+from ..runtime.state import ShardArena
+from ..runtime.transport import ProcPoolShardExecutor
 from .delta import DeltaGraph, EdgeDelta
 from .incremental import (RankState, _check_cert, _exact_residual,
                           _frontier_contrib, _group_sums, _seed_delta,
@@ -81,6 +83,7 @@ class ShardedUpdateStats:
     idle_s: float = 0.0        # total worker idle time (async mode only)
     attempts: int = 1          # async drain entries (>1 = STOP raced mass
                                # in flight and the drain was re-entered)
+    transport: str = "threads"  # "threads" | "procpool" (async mode only)
 
 
 def _scatter_add(out: np.ndarray, idx: np.ndarray,
@@ -193,10 +196,38 @@ def _make_plan(exchange: str, p: int, l1_target: float,
     return AllToAllPlan(p)
 
 
+class _ShardDrainFactory:
+    """Picklable procpool DrainFactory: rebuilds the batched
+    Gauss-Southwell sweep inside each worker process from the arena views
+    (`runtime.transport.DrainFactory` contract).  `_drain_shard` is
+    resolved through the module at call time, so a scoped override (the
+    benchmark's modeled drain clock) reaches forked workers too."""
+
+    def __init__(self, alpha: float, eps_floor: float, base_n: int):
+        self.alpha = alpha
+        self.eps_floor = eps_floor
+        self.base_n = base_n
+
+    def __call__(self, views):
+        arrays = (views["base_indptr"], views["base_indices"], self.base_n,
+                  views["dirty_rows"], views["out_deg"],
+                  views["dirty_indptr"], views["dirty_indices"])
+        x, r = views["x"], views["r"]
+        alpha, eps_floor = self.alpha, self.eps_floor
+
+        def drain_fn(i, s, e, step_target, outbox):
+            holder = [0.0]
+            got = _drain_shard(arrays, x, r, outbox, s, e, alpha,
+                               step_target, eps_floor, holder)
+            return got, holder[0]
+        return drain_fn
+
+
 def update_ranks_sharded(
         dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
         p: int = 4, tol: float = 1e-8, exchange: str = "allgather",
-        mode: str = "superstep",
+        mode: str = "superstep", transport: str = "threads",
+        n_workers: Optional[int] = None,
         sparsify_thresh: Optional[float] = None,
         sparsify_refresh_every: int = 4,
         pc_max_compute: int = 1, pc_max_monitor: int = 1,
@@ -209,11 +240,22 @@ def update_ranks_sharded(
     Mirrors `update_ranks` (same RankState in/out, same exact residual
     bookkeeping, same warm-started fallback) but runs the drain as the
     runtime-layer cycle described in the module docstring, either as the
-    deterministic superstep loop (``mode="superstep"``) or on real worker
-    threads with zero inter-drain barriers (``mode="async"``).  On success
+    deterministic superstep loop (``mode="superstep"``) or with zero
+    inter-drain barriers (``mode="async"``) on the selected transport:
+    ``transport="threads"`` (worker threads, PR 4 behavior) or
+    ``transport="procpool"`` (worker *processes* over a shared-memory
+    ShardArena — the rendering whose raw wall-clock escapes the GIL;
+    ``n_workers`` sizes the pool, default min(p, cores)).  On success
     ``stats.cert`` is sound and ``state.cert <= stats.cert`` (state.r is
     the exactly-maintained residual; the superstep bound is the driver's
-    all-reduced sum, the async bound is the exact post-fold recompute).
+    all-reduced sum, the async bound is the exact post-fold recompute —
+    under either transport).
+
+    A procpool worker crash (or kill) raises RuntimeError with the shared
+    segments released and the surviving mass folded back; a worker killed
+    *mid-sweep* may leave (x, r) inconsistent, so re-certify via
+    `refresh_residual` (or rebuild via `cold_state`) before trusting the
+    state after such a crash.
     """
     if state.version != dg.version:
         raise ValueError(
@@ -226,6 +268,12 @@ def update_ranks_sharded(
     if mode not in ("superstep", "async"):
         raise ValueError(f"unknown mode {mode!r}; expected 'superstep' "
                          "or 'async'")
+    if transport not in ("threads", "procpool"):
+        raise ValueError(f"unknown transport {transport!r}; expected "
+                         "'threads' or 'procpool'")
+    if transport == "procpool" and mode != "async":
+        raise ValueError("transport='procpool' requires mode='async' "
+                         "(the superstep loop is a host loop)")
     if delta.new_nodes and state.v is not None:
         raise NotImplementedError(
             "node arrivals with a custom teleport vector are not "
@@ -249,17 +297,34 @@ def update_ranks_sharded(
     arrays = _view_arrays(dg)
 
     if mode == "async":
-        # --- truly asynchronous drain: AsyncShardExecutor worker threads,
-        # per-pair mailboxes, plan consulted per local update, Fig. 1 by
-        # routed messages.  STOP can race mass in flight, so the exact
-        # residual is recomputed after every fold-back and the drain is
-        # re-entered (with fresh protocol state) until it truly holds —
-        # the published certificate is always the exact recompute.
-        def drain_fn(i, s, e, step_target, outbox):
-            holder = [0.0]
-            got = _drain_shard(arrays, x, r, outbox, s, e, alpha,
-                               step_target, eps_floor, holder)
-            return got, holder[0]
+        # --- truly asynchronous drain: shard workers on the selected
+        # transport (threads: per-pair mailboxes in-process; procpool:
+        # worker processes over a shared-memory ShardArena with lock-free
+        # rings), plan consulted per local update, Fig. 1 by routed
+        # messages.  STOP can race mass in flight, so the exact residual
+        # is recomputed after every fold-back and the drain is re-entered
+        # (with fresh protocol state) until it truly holds — the
+        # published certificate is always the exact recompute.
+        arena = None
+        if transport == "procpool":
+            # shard fragments move to shared memory once per update
+            # batch; workers rebuild the drain from the arena views
+            arena = ShardArena.from_arrays({
+                "r": r, "x": x,
+                "base_indptr": arrays[0], "base_indices": arrays[1],
+                "dirty_rows": arrays[3], "out_deg": arrays[4],
+                "dirty_indptr": arrays[5], "dirty_indices": arrays[6],
+            })
+            factory = _ShardDrainFactory(alpha=alpha, eps_floor=eps_floor,
+                                         base_n=int(arrays[2]))
+            r_run = arena["r"]
+        else:
+            def drain_fn(i, s, e, step_target, outbox):
+                holder = [0.0]
+                got = _drain_shard(arrays, x, r, outbox, s, e, alpha,
+                                   step_target, eps_floor, holder)
+                return got, holder[0]
+            r_run = r
 
         pushes_per_shard = np.zeros(p, dtype=np.int64)
         exchanges = bytes_moved = 0
@@ -268,35 +333,54 @@ def update_ranks_sharded(
         idle_s = 0.0
         capped = False
         attempts = 0
-        resid = float(np.abs(r).sum())
-        # always enter at least once (even an already-converged residual
-        # gets its STOP from a routed Fig. 1 transcript, not a shortcut)
-        while (attempts == 0 or resid > l1_target) \
-                and not capped and attempts < 4:
-            attempts += 1
-            plan = _make_plan(exchange, p, l1_target, sparsify_thresh,
-                              sparsify_refresh_every)
-            driver = TerminationDriver(p, pc_max_compute=pc_max_compute,
-                                       pc_max_monitor=pc_max_monitor)
-            # 2x push headroom vs the superstep budget: the fine-grained
-            # schedule pushes a row per *arrival* where the superstep loop
-            # batches a whole exchange generation into one push — same
-            # mass drained, more (cheaper) pops
-            ex = AsyncShardExecutor(
-                part, plan, driver, l1_target=l1_target,
-                bytes_per_entry=bytes_per_entry,
-                max_rounds=100 * max_supersteps,
-                max_total_pushes=2 * max_pushes
-                - int(pushes_per_shard.sum()))
-            res = ex.run(drain_fn, r)
-            pushes_per_shard += res.pushes_per_shard
-            exchanges += res.exchanges
-            bytes_moved += res.bytes_moved
-            step = max(step, int(res.rounds_per_shard.max()))
-            stop_round = res.stop_round
-            idle_s += float(res.idle_s_per_shard.sum())
-            capped = res.capped
-            resid = float(np.abs(r).sum())
+        try:
+            resid = float(np.abs(r_run).sum())
+            # always enter at least once (even an already-converged
+            # residual gets its STOP from a routed Fig. 1 transcript, not
+            # a shortcut)
+            while (attempts == 0 or resid > l1_target) \
+                    and not capped and attempts < 4:
+                attempts += 1
+                plan = _make_plan(exchange, p, l1_target, sparsify_thresh,
+                                  sparsify_refresh_every)
+                driver = TerminationDriver(p, pc_max_compute=pc_max_compute,
+                                           pc_max_monitor=pc_max_monitor)
+                # 2x push headroom vs the superstep budget: the
+                # fine-grained schedule pushes a row per *arrival* where
+                # the superstep loop batches a whole exchange generation
+                # into one push — same mass drained, more (cheaper) pops
+                push_budget = (2 * max_pushes
+                               - int(pushes_per_shard.sum()))
+                if transport == "procpool":
+                    ex = ProcPoolShardExecutor(
+                        part, plan, driver, l1_target=l1_target,
+                        bytes_per_entry=bytes_per_entry,
+                        max_rounds=100 * max_supersteps,
+                        max_total_pushes=push_budget, n_workers=n_workers)
+                    res = ex.run(factory, arena)
+                else:
+                    ex = AsyncShardExecutor(
+                        part, plan, driver, l1_target=l1_target,
+                        bytes_per_entry=bytes_per_entry,
+                        max_rounds=100 * max_supersteps,
+                        max_total_pushes=push_budget)
+                    res = ex.run(drain_fn, r_run)
+                pushes_per_shard += res.pushes_per_shard
+                exchanges += res.exchanges
+                bytes_moved += res.bytes_moved
+                step = max(step, int(res.rounds_per_shard.max()))
+                stop_round = res.stop_round
+                idle_s += float(res.idle_s_per_shard.sum())
+                capped = res.capped
+                resid = float(np.abs(r_run).sum())
+        finally:
+            if arena is not None:
+                # bring the fragments home, then release the segment
+                # (nothing survives in /dev/shm even on a worker crash)
+                r[:] = arena["r"]
+                x[:] = arena["x"]
+                r_run = None
+                arena.close()
 
         pushes = int(pushes_per_shard.sum())
         if resid <= l1_target and not capped:
@@ -305,7 +389,8 @@ def update_ranks_sharded(
                 pushes_per_shard=pushes_per_shard, exchanges=exchanges,
                 bytes_moved=bytes_moved, seed_l1=seed_l1, resid_l1=resid,
                 cert=resid / (1.0 - alpha), stop_superstep=stop_round,
-                mode=mode, idle_s=idle_s, attempts=attempts)
+                mode=mode, idle_s=idle_s, attempts=attempts,
+                transport=transport)
         return _solver_fallback(
             dg, state, alpha=alpha, tol=tol, method=method,
             backend=backend, solver_max_iters=solver_max_iters,
@@ -313,7 +398,7 @@ def update_ranks_sharded(
                           pushes_per_shard=pushes_per_shard,
                           exchanges=exchanges, bytes_moved=bytes_moved,
                           seed_l1=seed_l1, mode=mode, idle_s=idle_s,
-                          attempts=max(attempts, 1)))
+                          attempts=max(attempts, 1), transport=transport))
 
     local_target = l1_target / (2.0 * p)
     plan = _make_plan(exchange, p, l1_target, sparsify_thresh,

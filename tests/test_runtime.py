@@ -116,6 +116,45 @@ def test_sparsified_payload_rows_topk():
         delta) is None                           # no top-k: full fragment
 
 
+def test_sparsified_payload_rows_adaptive():
+    """top_k="adaptive": k is read off the row-delta distribution — a
+    concentrated payload ships few rows, a flat one ships many — and the
+    per-pair EWMA smooths the trajectory."""
+    sp = SparsifiedPlan(3, thresh=0.0, refresh_every=4, top_k="adaptive",
+                        cover_frac=0.9, ewma=0.5)
+    concentrated = np.array([100.0, 0.1, 0.1, 0.1, 0.1, 0.1])
+    rows = sp.payload_rows(concentrated)         # pair-less: no EWMA state
+    assert rows.tolist() == [0]                  # one row covers 90%
+    flat = np.ones(6)
+    assert sp.payload_rows(flat) is None         # 90% of flat = ~all rows
+
+    # per-pair EWMA: after many concentrated payloads, k settles near 1;
+    # one flat payload only pulls it halfway (ewma=0.5)
+    for _ in range(6):
+        rows = sp.payload_rows(concentrated, 0, 1)
+    assert rows.size == 1
+    rows = sp.payload_rows(flat, 0, 1)
+    assert rows is None or 1 < rows.size < 6     # smoothed, not slammed
+    # an independent pair is unaffected by (0, 1)'s profile
+    assert sp.payload_rows(concentrated, 2, 0).size == 1
+
+    # zero delta ships nothing new (full-fragment None, no state update)
+    assert sp.payload_rows(np.zeros(6), 0, 1) is None
+
+
+def test_des_sparsified_adaptive_topk_converges(small_op, exact_x):
+    """sparsify_top_k="adaptive" in the DES rendering: payload rows come
+    from the observed per-pair mass profile; forced refreshes still ship
+    full fragments, so the run converges to the exact ranks."""
+    afp = AsyncFixedPoint(small_op, kind="power")
+    r = afp.solve_des(p=4, cfg=DESConfig(
+        tol=1e-9, norm="inf", base_flops_rate=1e5, bandwidth=1e9,
+        msg_latency=1e-4, cancel_window=None, max_iters=5000, seed=1,
+        comm_policy="sparsified", sparsify_thresh=1e-7,
+        sparsify_refresh_every=4, sparsify_top_k="adaptive"))
+    assert np.abs(r.x - exact_x).max() < 1e-6
+
+
 # ---------------------------------------------------------------------------
 # ShardState
 # ---------------------------------------------------------------------------

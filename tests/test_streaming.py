@@ -227,38 +227,10 @@ def test_stale_state_rejected(dgraph):
 
 
 # ---------------------------------------------------------------------------
-# acceptance gates (50k graph, both backends)
+# acceptance gates (50k graph, both backends) — the accept_graph /
+# accept_delta / accept_cold fixtures are session-scoped in conftest.py
+# (shared with tests/test_transport.py so the 50k builds happen once)
 # ---------------------------------------------------------------------------
-@pytest.fixture(scope="module")
-def accept_graph():
-    return powerlaw_webgraph(n=50_000, target_nnz=400_000, n_dangling=50,
-                             seed=3)
-
-
-@pytest.fixture(scope="module")
-def accept_delta(accept_graph):
-    """A random ~1% edge delta (85% inserts / 15% deletes of existing)."""
-    g = accept_graph
-    rng = np.random.default_rng(31)
-    k = g.nnz // 100
-    n_del = k * 15 // 100
-    slots = rng.choice(g.nnz, size=n_del, replace=False)
-    src_of_edge = np.repeat(np.arange(g.n, dtype=np.int64),
-                            np.diff(g.indptr))
-    return EdgeDelta(
-        add_src=rng.integers(0, g.n, k - n_del),
-        add_dst=g.indices[rng.integers(0, g.nnz, k - n_del)].astype(np.int64),
-        del_src=src_of_edge[slots],
-        del_dst=g.indices[slots].astype(np.int64))
-
-
-@pytest.fixture(scope="module")
-def accept_cold(accept_graph, accept_delta):
-    """Cold solve_power on the mutated graph, far tighter than any tol the
-    backends are asked for (error <= 1e-9/0.15 ~ 7e-9 L1)."""
-    dg = DeltaGraph(accept_graph)
-    dg.apply(accept_delta)
-    return solve_power(dg.operator(0.85), tol=1e-9, max_iters=2000).x
 
 
 @pytest.mark.parametrize("backend,tol", [("segment_sum", 1e-6),
