@@ -1,13 +1,19 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench-quick bench verify stream-demo
+.PHONY: test test-fast chaos bench-quick bench verify stream-demo
 
 test:
 	$(PY) -m pytest -q
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
+
+# fault-injection + self-healing runtime suite (PR 6): seeded kill /
+# drop / dup / delay plans, supervised recovery on both transports, the
+# 50k chaos acceptance, and the hypothesis property sweep where installed
+chaos:
+	$(PY) -m pytest -q tests/test_faults.py tests/test_faults_property.py
 
 bench-quick:
 	$(PY) -m benchmarks.run --quick
@@ -20,7 +26,7 @@ stream-demo:
 	$(PY) examples/streaming_rank_server.py
 
 # tier-1 gate + the quick benchmark pass that refreshes BENCH_PR<N>.json
-# (currently BENCH_PR5.json; see benchmarks/run.py --out) — run before
+# (currently BENCH_PR6.json; see benchmarks/run.py --out) — run before
 # every PR.  The measured suite runtime is embedded in the BENCH file so
 # benchmarks/check_tier1_runtime.py can gate against the best of the last
 # two PRs instead of the frozen PR2 snapshot.

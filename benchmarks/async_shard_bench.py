@@ -42,8 +42,14 @@ Measurement regimes:
       drain per superstep; the async executor lets fast shards run ahead
       (bounded by the §6 exchange plan).
 
+  chaos (PR 6)
+      The acceptance workload drained by p=4 procpool under seeded
+      faults (mid-drain worker kill, 10% drop + 10% duplicate, both):
+      recovery time and total overhead vs the no-fault baseline, with
+      the certificate required to hold in every row.
+
 Emits benchmarks/results/async_shard_bench.json and feeds the
-``async_shard`` section of BENCH_PR5.json via benchmarks/run.py.
+``async_shard`` section of BENCH_PR6.json via benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -98,7 +104,7 @@ def _workload():
 
 def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
          transport: str = "threads", cost: str = "sleep",
-         n_workers=None):
+         n_workers=None, faults=None):
     """One sharded update; rate_per_shard (pushes/s, per shard) switches
     on the modeled drain clock via a scoped _drain_shard wrapper —
     `cost="sleep"` yields the GIL (dedicated-core model), `cost="burn"`
@@ -134,7 +140,8 @@ def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
                                     category=RuntimeWarning)
             st, stats = update_ranks_sharded(dg, delta, st, p=p, tol=TOL,
                                              mode=mode, transport=transport,
-                                             n_workers=n_workers)
+                                             n_workers=n_workers,
+                                             faults=faults)
         dt = time.perf_counter() - t0
     finally:
         sharded_mod._drain_shard = real_drain
@@ -144,7 +151,9 @@ def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
                 exchanges=int(stats.exchanges),
                 bytes_moved=int(stats.bytes_moved),
                 cert=float(stats.cert), idle_s=round(float(stats.idle_s), 3),
-                attempts=int(stats.attempts))
+                attempts=int(stats.attempts),
+                recoveries=int(stats.recoveries),
+                recovery_s=round(float(stats.recovery_s), 4))
 
 
 def main():
@@ -200,6 +209,38 @@ def main():
             print(f"    burn      {transport:9s} p={p} {row['s']:7.2f}s "
                   f"pushes={row['pushes']}")
 
+    print("  [async] chaos (PR 6): p=4 procpool under seeded faults ...")
+    # Recovery cost of the self-healing runtime: the acceptance workload
+    # drained under (a) a mid-drain worker kill, (b) a 10% drop + 10%
+    # duplicate lossy wire, (c) both at once — against a no-fault
+    # baseline measured the same way.  `recovery_s` is the supervisor's
+    # death-detection -> respawned time; `overhead_vs_no_faults` is total
+    # wall-clock (re-drain attempts included) over the clean run.
+    from repro.runtime import FaultPlan
+    chaos = []
+    chaos_plans = [
+        ("no_faults", None),
+        ("kill", FaultPlan(seed=7, kill={1: 40})),
+        ("drop_dup", FaultPlan(seed=7, drop_rate=0.10, dup_rate=0.10)),
+        ("kill_drop_dup", FaultPlan(seed=7, kill={1: 40},
+                                    drop_rate=0.10, dup_rate=0.10)),
+    ]
+    base_s = None
+    for name, fplan in chaos_plans:
+        row = _run(g, delta, base, "async", 4, transport="procpool",
+                   faults=fplan)
+        row["faults"] = name
+        if name == "no_faults":
+            base_s = row["s"]
+        row["overhead_vs_no_faults"] = (round(row["s"] / base_s, 3)
+                                        if base_s else None)
+        chaos.append(row)
+        print(f"    chaos     {name:14s} p=4 {row['s']:7.2f}s "
+              f"recoveries={row['recoveries']} "
+              f"recovery_s={row['recovery_s']:.3f} "
+              f"overhead={row['overhead_vs_no_faults']}x "
+              f"cert={row['cert']:.1e}")
+
     print("  [async] heterogeneous shards (rate/(1+i), p=4) ...")
     het = []
     rates = [DRAIN_RATE / (1 + i) for i in range(4)]
@@ -218,7 +259,12 @@ def main():
         drain_rate_pushes_per_s=DRAIN_RATE,
         cores=cores,
         raw=raw, drain_dominated=dom, drain_dominated_burn=burn,
-        heterogeneous=het,
+        heterogeneous=het, chaos=chaos,
+        chaos_recovery_s=next(r["recovery_s"] for r in chaos
+                              if r["faults"] == "kill_drop_dup"),
+        chaos_overhead_vs_no_faults=next(
+            r["overhead_vs_no_faults"] for r in chaos
+            if r["faults"] == "kill_drop_dup"),
         speedup_p4_vs_p1_async=round(t(dom, "async", 1)
                                      / t(dom, "async", 4), 3),
         raw_speedup_p4_vs_p1_async=round(t(raw, "async", 1)

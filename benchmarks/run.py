@@ -7,7 +7,7 @@ Every run (including --quick) starts with the matvec-backend bench, the
 streaming-update bench, the sharded-runtime bench (sparsified vs
 allgather) and the async-executor bench (async vs superstep shard
 drains, threads vs procpool transports) and writes the machine-readable
-perf-trajectory file (``--out``, default BENCH_PR5.json) at the repo
+perf-trajectory file (``--out``, default BENCH_PR6.json) at the repo
 root; ``--tier1-seconds`` embeds the measured suite runtime for the
 check_tier1_runtime.py gate; --quick then skips the slow DES paper-table
 and SPMD staleness studies.
@@ -29,7 +29,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR5.json",
+    ap.add_argument("--out", default="BENCH_PR6.json",
                     help="perf-trajectory output (BENCH_PR<N>.json for "
                          "PR N; relative paths land at the repo root)")
     ap.add_argument("--tier1-seconds", default=None,
@@ -121,6 +121,14 @@ def main() -> None:
         f"threads_burn={arec['threads_burn_speedup_p4_vs_p1']:.2f}x,"
         f"raw_p4_vs_p1={arec['procpool_raw_speedup_p4_vs_p1']:.2f}x,"
         f"cores={arec['cores']}"))
+    ck = next(r for r in arec["chaos"] if r["faults"] == "kill_drop_dup")
+    csv_rows.append((
+        "chaos_recovery",
+        f"{ck['s'] * 1e6:.0f}",
+        f"recoveries={ck['recoveries']},"
+        f"recovery_s={ck['recovery_s']:.3f},"
+        f"overhead_vs_no_faults={ck['overhead_vs_no_faults']:.2f}x,"
+        f"cert={ck['cert']:.1e}"))
     brec["async_shard"] = arec
     if tier1_seconds is not None:
         brec["tier1_seconds"] = tier1_seconds

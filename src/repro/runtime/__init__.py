@@ -29,12 +29,22 @@ three substrates that used to hand-roll it (`core.des`, `core.spmd`,
              thread per shard, per-pair boundary-residual mailboxes (no
              superstep barrier), ExchangePlan consulted per local update,
              termination through the driver's message rendering.
+  faults   — FaultPlan / FaultyContext: deterministic seeded fault
+             injection (worker kill/hang, exchange drop/dup/delay, slow
+             shards) at the TransportContext seam, for both renderings.
+  supervisor — ShardSupervisor: self-healing for the procpool rendering —
+             supervised worker restart with capped backoff, checkpoint
+             restore, ledger reconciliation, conservative Fig. 1 re-entry.
 """
-from .state import ArenaHandle, ShardArena, ShardState
+from .state import (ArenaHandle, ShardArena, ShardState,
+                    sweep_stale_segments)
 from .local import LocalSolver, BlockLocalSolver
 from .exchange import (ExchangePlan, AllToAllPlan, RingPlan, AdaptivePlan,
                        SparsifiedPlan, make_plan, spmd_exchange)
 from .driver import TerminationDriver
+from .faults import (FaultPlan, FaultState, FaultyContext,
+                     InjectedWorkerKill)
+from .supervisor import BackoffPolicy, RestartEvent, ShardSupervisor
 from .transport import (Channel, HostAllReduce, ProcPoolShardExecutor,
                         ReductionChannel, ShmRing, ThreadedShardTransport,
                         TransportContext, WorkerConfig, default_pool_size,
@@ -43,11 +53,13 @@ from .executor import (AsyncRunResult, AsyncShardExecutor, PairMailbox,
                        UniformAccumulator)
 
 __all__ = [
-    "ShardState", "ShardArena", "ArenaHandle",
+    "ShardState", "ShardArena", "ArenaHandle", "sweep_stale_segments",
     "LocalSolver", "BlockLocalSolver",
     "ExchangePlan", "AllToAllPlan", "RingPlan", "AdaptivePlan",
     "SparsifiedPlan", "make_plan", "spmd_exchange",
     "TerminationDriver",
+    "FaultPlan", "FaultState", "FaultyContext", "InjectedWorkerKill",
+    "BackoffPolicy", "RestartEvent", "ShardSupervisor",
     "Channel", "TransportContext", "WorkerConfig", "shard_worker_loop",
     "ThreadedShardTransport", "ProcPoolShardExecutor", "ShmRing",
     "default_pool_size", "ReductionChannel", "HostAllReduce", "mesh_psum",

@@ -63,6 +63,17 @@ class TerminationDriver:
     def stop_shard(self, i: int) -> None:
         self.ues[i] = self.ues[i].stop()
 
+    def restart_shard(self, i: int) -> None:
+        """Conservative Fig. 1 re-entry for a recovered shard worker: a
+        fresh computing machine plus a DIVERGE delivered on its behalf,
+        so a stale CONVERGE flag from the dead incarnation can never ride
+        into STOP while the shard re-derives its value.  (DIVERGE clears
+        the monitor's flag and resets its persistence counter; the
+        follow-up step can therefore never issue STOP.)"""
+        self.ues[i] = ComputingUEState(pc_max=self.pc_max_compute)
+        self.monitor = self.monitor.recv(i, Msg.DIVERGE)
+        self.monitor, _ = self.monitor.step()
+
     # -- all-reduced value rendering (sharded streaming) -----------------
     def allreduce_step(self, values, target: float) -> Tuple[float, bool]:
         """One superstep of the value rendering: all-reduce the per-shard

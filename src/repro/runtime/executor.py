@@ -65,6 +65,7 @@ import numpy as np
 from ..core.partition import Partition
 from .driver import TerminationDriver
 from .exchange import ExchangePlan
+from .faults import FaultPlan, FaultState
 from .transport import (AsyncRunResult, DrainFn, PairMailbox,  # noqa: F401
                         ThreadedShardTransport, UniformAccumulator,
                         WorkerConfig)
@@ -87,7 +88,10 @@ class AsyncShardExecutor:
                  bytes_per_entry: int = 8, max_rounds: int = 1_000_000,
                  max_total_pushes: Optional[int] = None,
                  idle_sleep: float = 2e-4, drain_frac: float = 0.05,
-                 hysteresis: float = 2.0):
+                 hysteresis: float = 2.0,
+                 faults: Optional[FaultPlan] = None,
+                 fault_state: Optional[FaultState] = None,
+                 max_restarts: Optional[int] = None):
         if driver.p != part.p or plan.p != part.p:
             raise ValueError(f"partition ({part.p}), plan ({plan.p}) and "
                              f"driver ({driver.p}) disagree on p")
@@ -102,6 +106,10 @@ class AsyncShardExecutor:
         self.idle_sleep = float(idle_sleep)
         self.drain_frac = float(drain_frac)
         self.hysteresis = float(hysteresis)
+        self.faults = faults if (faults is not None and faults.active) \
+            else None
+        self.fault_state = fault_state
+        self.max_restarts = max_restarts
 
     def run(self, drain_fn: DrainFn, r: np.ndarray) -> AsyncRunResult:
         """Drive the drains until STOP or a cap; on return every mailbox,
@@ -120,5 +128,7 @@ class AsyncShardExecutor:
                 max_total_pushes=self.max_total_pushes,
                 idle_sleep=float(self.idle_sleep),
                 drain_frac=float(self.drain_frac),
-                hysteresis=float(self.hysteresis)))
+                hysteresis=float(self.hysteresis)),
+            faults=self.faults, fault_state=self.fault_state,
+            max_restarts=self.max_restarts)
         return transport.run(drain_fn, r)

@@ -98,6 +98,53 @@ class ShardState:
 # ShardArena — one shared-memory segment holding named arrays
 # ---------------------------------------------------------------------------
 _ALIGN = 64          # cache-line align every array inside the segment
+_SHM_DIR = "/dev/shm"
+
+
+def sweep_stale_segments(prefix: str = "repro_arena") -> int:
+    """Unlink orphaned `/dev/shm/<prefix>_<pid>_<hex>` segments whose
+    creating process is gone; returns how many were reclaimed.
+
+    Segment names are pid-stamped at create time precisely so this sweep
+    can tell "crashed parent's leftover" from "concurrent run's live
+    arena": `os.kill(pid, 0)` distinguishes a dead pid
+    (ProcessLookupError -> reclaim) from one we merely can't signal
+    (PermissionError -> alive, leave it).  Our own segments are skipped —
+    they are live by definition.  Called from `ShardArena.create`, so a
+    box that accumulates kill-9'd runs can't exhaust /dev/shm; best-
+    effort on every syscall because another sweep (or the owner's exit
+    handler) may race us to the unlink."""
+    try:
+        names = os.listdir(_SHM_DIR)
+    except OSError:                  # non-Linux / no tmpfs: nothing to do
+        return 0
+    own = os.getpid()
+    reclaimed = 0
+    for nm in names:
+        if not nm.startswith(prefix + "_"):
+            continue
+        tokens = nm.split("_")
+        if len(tokens) < 3:
+            continue
+        try:
+            pid = int(tokens[-2])    # "<prefix>_<pid>_<hex>" — prefix may
+        except ValueError:           # itself contain underscores
+            continue
+        if pid == own:
+            continue
+        try:
+            os.kill(pid, 0)
+            continue                 # delivered: creator is alive
+        except ProcessLookupError:
+            pass                     # creator is gone: stale segment
+        except OSError:
+            continue                 # EPERM etc.: alive under another uid
+        try:
+            os.unlink(os.path.join(_SHM_DIR, nm))
+            reclaimed += 1
+        except OSError:
+            pass
+    return reclaimed
 
 
 def _attach_untracked(name: str):
@@ -162,8 +209,12 @@ class ShardArena:
     def create(cls, spec: Dict[str, Tuple[Tuple[int, ...], np.dtype]],
                prefix: str = "repro_arena") -> "ShardArena":
         """Allocate one segment holding an array per `spec` entry
-        (key -> (shape, dtype)), zero-initialized."""
+        (key -> (shape, dtype)), zero-initialized.  Creating an arena
+        also sweeps orphaned segments left by crashed/killed parents
+        (`sweep_stale_segments`) so repeated kill-9'd runs on one box
+        can't exhaust /dev/shm."""
         from multiprocessing import shared_memory
+        sweep_stale_segments("repro_arena")
         layout = []
         off = 0
         for key, (shape, dtype) in spec.items():

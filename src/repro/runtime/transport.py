@@ -68,7 +68,9 @@ from typing import TYPE_CHECKING
 from ..core.partition import Partition
 from ..core.termination import ComputingUEState, Msg
 from .exchange import ExchangePlan
+from .faults import FaultPlan, FaultState, FaultyContext, InjectedWorkerKill
 from .state import ArenaHandle, ShardArena
+from .supervisor import BackoffPolicy, ShardSupervisor
 
 if TYPE_CHECKING:      # annotation-only: core/spmd.py imports this module
     from .driver import TerminationDriver   # while runtime.driver is still
@@ -111,17 +113,29 @@ class PairMailbox:
     a lock-free read of the last computed mass (stale reads only ever
     *over*-count mass that was just drained, never under-count mass that
     was deposited before the last `deposit` returned — deposits publish
-    the new l1 under the lock)."""
+    the new l1 under the lock).
 
-    __slots__ = ("lock", "buf", "_l1")
+    Deposits may carry a sender-assigned sequence number: a deposit whose
+    seq is <= the highest already folded is a duplicated (or reordered
+    stale) delivery and is dropped — the idempotent-intake hardening that
+    lets `FaultPlan.dup_rate` re-deliver payloads at the wire level
+    without ever minting residual mass.  Unsequenced deposits (seq=None,
+    the default) keep the original always-fold semantics."""
+
+    __slots__ = ("lock", "buf", "_l1", "_last_seq")
 
     def __init__(self, block_size: int):
         self.lock = threading.Lock()
         self.buf = np.zeros(block_size)
         self._l1 = 0.0
+        self._last_seq = 0
 
-    def deposit(self, block: np.ndarray) -> None:
+    def deposit(self, block: np.ndarray, seq: Optional[int] = None) -> None:
         with self.lock:
+            if seq is not None:
+                if seq <= self._last_seq:
+                    return              # duplicate/stale redelivery
+                self._last_seq = seq
             self.buf += block
             self._l1 = float(np.abs(self.buf).sum())
 
@@ -183,19 +197,35 @@ class ShmRing:
 
     `head`/`tail` are (1,)-shaped int64 views; `cnt` is (depth,) int64;
     `idx`/`val` are (depth, cap) payload slots.  Row ids are local to the
-    consumer's block."""
+    consumer's block.
 
-    __slots__ = ("head", "tail", "cnt", "idx", "val", "depth", "cap")
+    Optionally sequence-numbered (`seq` a (depth,) int64 slot array,
+    `next_seq`/`last_seq` (1,)-shaped producer/consumer counters, all
+    shared-memory views so they survive a worker restart): the producer
+    stamps every record with a monotonically increasing seq, a duplicated
+    delivery (`push(..., dup=True)`) re-publishes the *same* seq, and
+    `pop_into` folds each seq at most once — the idempotent-intake
+    hardening that makes `FaultPlan.dup_rate` and crash-replayed folds
+    safe.  The five-argument form (no seq views) keeps the original
+    always-fold semantics."""
 
-    def __init__(self, head, tail, cnt, idx, val):
+    __slots__ = ("head", "tail", "cnt", "idx", "val", "depth", "cap",
+                 "seq", "next_seq", "last_seq")
+
+    def __init__(self, head, tail, cnt, idx, val, seq=None, next_seq=None,
+                 last_seq=None):
         self.head, self.tail = head, tail
         self.cnt, self.idx, self.val = cnt, idx, val
         self.depth = int(cnt.shape[0])
         self.cap = int(idx.shape[1])
+        self.seq, self.next_seq, self.last_seq = seq, next_seq, last_seq
 
-    def push(self, rows: np.ndarray, vals: np.ndarray) -> bool:
+    def push(self, rows: np.ndarray, vals: np.ndarray,
+             dup: bool = False) -> bool:
         """Publish one record; False when the ring is full (the caller
-        keeps the mass in its outbox and retries on a later update)."""
+        keeps the mass in its outbox and retries on a later update).
+        `dup=True` re-publishes the previous record's sequence number (a
+        wire-level duplicate the consumer will drop)."""
         h, t = int(self.head[0]), int(self.tail[0])
         if t - h >= self.depth:
             return False
@@ -204,16 +234,40 @@ class ShmRing:
         self.cnt[slot] = k
         self.idx[slot, :k] = rows
         self.val[slot, :k] = vals
+        if self.seq is not None:
+            s = int(self.next_seq[0])
+            if s == 0:
+                s = 1               # seq 0 is the consumer's "nothing
+                # folded yet" sentinel; a zero-initialized producer
+                # counter starts at 1 (single-writer, so lazy-init races
+                # with nobody)
+            if dup:
+                s -= 1              # same seq as the record just pushed
+            self.seq[slot] = s
+            if not dup:
+                self.next_seq[0] = s + 1
         self.tail[0] = t + 1        # publish AFTER the data is in place
         return True
 
     def pop_into(self, out: np.ndarray) -> float:
         """Fold every pending record into `out` (the owner's block view);
-        returns the |payload| L1 folded."""
+        returns the |payload| L1 folded.  Sequence-numbered records are
+        folded at most once (duplicates and crash-replays are skipped);
+        `last_seq` advances *before* the fold, so a consumer killed
+        mid-fold can at worst lose one record (a bounded under-count the
+        caller's exact recompute covers) but never double-fold."""
         moved = 0.0
         h, t = int(self.head[0]), int(self.tail[0])
+        dedupe = self.seq is not None
         while h < t:
             slot = h % self.depth
+            if dedupe:
+                s = int(self.seq[slot])
+                if s <= int(self.last_seq[0]):
+                    h += 1
+                    self.head[0] = h
+                    continue
+                self.last_seq[0] = s
             k = int(self.cnt[slot])
             ix = self.idx[slot, :k]
             v = self.val[slot, :k]
@@ -222,6 +276,24 @@ class ShmRing:
             h += 1
             self.head[0] = h        # free the slot before the next read
         return moved
+
+    def pending_l1(self) -> float:
+        """|payload| L1 of the records the consumer has not folded yet
+        (seq-deduped view), WITHOUT consuming them — the supervisor's
+        ground truth when it reconciles the in-flight ledgers after a
+        worker death (see ShardSupervisor._recover_shard)."""
+        total = 0.0
+        h, t = int(self.head[0]), int(self.tail[0])
+        last = int(self.last_seq[0]) if self.seq is not None else None
+        while h < t:
+            slot = h % self.depth
+            if last is None or int(self.seq[slot]) > last:
+                k = int(self.cnt[slot])
+                total += float(np.abs(self.val[slot, :k]).sum())
+                if last is not None:
+                    last = int(self.seq[slot])  # count dups once
+            h += 1
+        return total
 
     def empty(self) -> bool:
         return int(self.tail[0]) == int(self.head[0])
@@ -244,6 +316,8 @@ class AsyncRunResult:
     stop_round: int                 # issuing shard's round at STOP (-1)
     idle_s_per_shard: np.ndarray    # time spent parked waiting for mail
     wall_s: float
+    recoveries: int = 0             # supervised worker restarts
+    recovery_s: float = 0.0         # total death-detection -> respawned
 
 
 @dataclasses.dataclass(frozen=True)
@@ -354,7 +428,10 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
     # intake/drain/exchange can change them, so idle rounds cost O(p)
     # instead of O(n)
     own_l1 = float(np.abs(r[s:e]).sum())
-    outbox_l1 = 0.0
+    # a restarted worker can inherit a non-empty outbox (plan-withheld or
+    # backpressured mass from the dead incarnation) — seed the cache from
+    # the structure itself, never assume empty
+    outbox_l1 = float(np.abs(outbox).sum())
     own_dirty = outbox_dirty = False
     it = 0            # raw rounds (spin included): caps, telemetry
     updates = 0       # *local updates*: the ExchangePlan's clock
@@ -526,6 +603,10 @@ class ThreadContext:
                            capped=False)
         self._inboxes = [[self.mail[j][i] for j in range(p) if j != i]
                          for i in range(p)]
+        # per-pair delivery sequence (writer: shard i only) — lets the
+        # mailboxes drop wire-level duplicates; survives worker restarts
+        # because the context outlives its workers
+        self._next_seq = np.ones((p, p), dtype=np.int64)
 
     # -- stop/caps -------------------------------------------------------
     def stopped(self) -> bool:
@@ -579,9 +660,15 @@ class ThreadContext:
     def total_pushes(self) -> int:
         return int(self.pushes.sum())
 
-    def send(self, i: int, d: int, box: np.ndarray) -> int:
+    def send(self, i: int, d: int, box: np.ndarray,
+             dup: bool = False) -> int:
         nz = int(np.count_nonzero(box))
-        self.mail[i][d].deposit(box)
+        seq = int(self._next_seq[i, d])
+        self._next_seq[i, d] = seq + 1
+        mb = self.mail[i][d]
+        mb.deposit(box, seq=seq)
+        if dup:
+            mb.deposit(box, seq=seq)    # wire duplicate: deduped intake
         box[:] = 0.0
         return nz
 
@@ -620,7 +707,11 @@ class ThreadedShardTransport:
     `ThreadContext` (AsyncShardExecutor delegates here)."""
 
     def __init__(self, part: Partition, plan: ExchangePlan,
-                 driver: TerminationDriver, cfg: WorkerConfig):
+                 driver: TerminationDriver, cfg: WorkerConfig,
+                 faults: Optional[FaultPlan] = None,
+                 fault_state: Optional[FaultState] = None,
+                 max_restarts: Optional[int] = None,
+                 restart_backoff: BackoffPolicy = BackoffPolicy()):
         if driver.p != part.p or plan.p != part.p:
             raise ValueError(f"partition ({part.p}), plan ({plan.p}) and "
                              f"driver ({driver.p}) disagree on p")
@@ -628,25 +719,70 @@ class ThreadedShardTransport:
         self.plan = plan
         self.driver = driver
         self.cfg = cfg
+        self.faults = faults
+        self.fault_state = fault_state
+        self.max_restarts = (2 * part.p if max_restarts is None
+                             else int(max_restarts))
+        self.restart_backoff = restart_backoff
 
     def run(self, drain_fn: DrainFn, r: np.ndarray) -> AsyncRunResult:
         """Drive the drains until STOP or a cap; on return every mailbox,
         outbox and pending uniform delta has been folded back into `r`, so
-        `r` is again the one exactly-maintained residual."""
+        `r` is again the one exactly-maintained residual.
+
+        An `InjectedWorkerKill` (FaultPlan kill schedule) is supervised,
+        not propagated: the shard re-enters Fig. 1 conservatively
+        (`driver.restart_shard` — DIVERGE until its value recomputes) and
+        its loop restarts after capped exponential backoff, drawing from a
+        global restart budget.  Real exceptions keep the PR 4 fail-fast
+        contract."""
         p, part = self.part.p, self.part
         t0 = time.perf_counter()
         ctx = ThreadContext(part, self.driver, self.cfg)
         ctx.last_values[:] = [float(np.abs(r[s:e]).sum())
                               for s, e in (part.block(i) for i in range(p))]
+        wctx: TransportContext = ctx
+        if self.faults is not None:
+            fstate = self.fault_state or self.faults.state(p)
+            wctx = FaultyContext(ctx, self.faults, part,
+                                 fired=fstate.fired, kill_mode="thread")
         errors: List[Optional[BaseException]] = [None] * p
+        budget = [self.max_restarts]
+        recovery = dict(n=0, s=0.0)
 
         def worker(i: int) -> None:
-            try:
-                shard_worker_loop(i, r, part, self.plan, self.cfg, ctx,
-                                  drain_fn)
-            except BaseException as exc:    # pragma: no cover - reraised
-                errors[i] = exc
-                ctx.stop_evt.set()
+            attempt = 0
+            while True:
+                try:
+                    shard_worker_loop(i, r, part, self.plan, self.cfg,
+                                      wctx, drain_fn)
+                    return
+                except InjectedWorkerKill:
+                    with ctx.stat_lock:
+                        ok = budget[0] > 0
+                        if ok:
+                            budget[0] -= 1
+                            recovery["n"] += 1
+                    if not ok:
+                        errors[i] = RuntimeError(
+                            f"shard worker {i} killed with the restart "
+                            f"budget ({self.max_restarts}) exhausted")
+                        ctx.stop_evt.set()
+                        return
+                    if ctx.stopped():
+                        return
+                    t_rec = time.perf_counter()
+                    with ctx.driver_lock:
+                        if not self.driver.stopped:
+                            self.driver.restart_shard(i)
+                    time.sleep(self.restart_backoff.delay(attempt))
+                    attempt += 1
+                    with ctx.stat_lock:
+                        recovery["s"] += time.perf_counter() - t_rec
+                except BaseException as exc:  # pragma: no cover - reraised
+                    errors[i] = exc
+                    ctx.stop_evt.set()
+                    return
 
         threads = [threading.Thread(target=worker, args=(i,),
                                     name=f"shard-drain-{i}", daemon=True)
@@ -683,7 +819,8 @@ class ThreadedShardTransport:
             bytes_moved=ctx.shared["bytes_moved"],
             stop_round=ctx.shared["stop_round"],
             idle_s_per_shard=ctx.idle_s,
-            wall_s=time.perf_counter() - t0)
+            wall_s=time.perf_counter() - t0,
+            recoveries=recovery["n"], recovery_s=recovery["s"])
 
 
 # ---------------------------------------------------------------------------
@@ -721,16 +858,42 @@ def _ctl_spec(p: int, n: int, part: Partition, ring_depth: int,
         "uni_seen": ((p,), np.float64),     # cumulative takes, writer = i
         "sent_abs": ((p, p), np.float64),   # |payload| shipped, writer = src
         "recv_abs": ((p, p), np.float64),   # |payload| folded, writer = dst
+        "send_intent": ((p, p), np.float64),  # in-window |payload|: written
+        # before the sent_abs bump, cleared after the push — the supervisor
+        # rolls an uncleared intent back so a worker killed inside the
+        # window can't strand a phantom in-flight payload (livelock)
         "outbox": ((p, n), np.float64),
         "mail_head": ((p, p), np.int64),    # writer = consumer (dst)
         "mail_tail": ((p, p), np.int64),    # writer = producer (src)
         "mail_cnt": ((p, p, ring_depth), np.int64),
         "mail_idx": ((p, p, ring_depth, cap), np.int32),
         "mail_val": ((p, p, ring_depth, cap), np.float64),
+        "mail_seq": ((p, p, ring_depth), np.int64),   # record seqs
+        "mail_next_seq": ((p, p), np.int64),  # writer = producer (src)
+        "mail_last_seq": ((p, p), np.int64),  # writer = consumer (dst)
         "msg_head": ((p,), np.int64),       # consumer = parent pump
         "msg_tail": ((p,), np.int64),       # producer = shard i
         "msg_buf": ((p, _MSG_RING_DEPTH), np.int64),
+        # --- self-healing state (supervisor.py) ---
+        "busy": ((p,), np.int64),           # 1 while shard i is mid-sweep
+        "fault_fired": ((2, p), np.int64),  # FaultPlan kill/hang gates
+        "ckpt_seq": ((p,), np.int64),       # seqlock (odd = mid-write)
+        "ckpt_r": ((n,), np.float64),       # per-shard residual checkpoint
+        "ckpt_x": ((n,), np.float64),       # per-shard iterate checkpoint
+        "restarts": ((p,), np.int64),       # writer = parent supervisor
     }
+
+
+def _ctl_ring(ctl: ShardArena, i: int, d: int) -> ShmRing:
+    """The (src=i, dst=d) mail ring over the control arena, sequence-
+    numbered: producer/consumer counters live in the arena too, so
+    dedupe state survives a worker restart (both sides single-writer)."""
+    return ShmRing(
+        ctl["mail_head"][i, d:d + 1], ctl["mail_tail"][i, d:d + 1],
+        ctl["mail_cnt"][i, d], ctl["mail_idx"][i, d],
+        ctl["mail_val"][i, d], seq=ctl["mail_seq"][i, d],
+        next_seq=ctl["mail_next_seq"][i, d:d + 1],
+        last_seq=ctl["mail_last_seq"][i, d:d + 1])
 
 
 class ProcContext:
@@ -741,10 +904,15 @@ class ProcContext:
     parent's monitor."""
 
     def __init__(self, ctl: ShardArena, part: Partition, cfg: WorkerConfig,
-                 pc_max_compute: int):
+                 pc_max_compute: int, r: Optional[np.ndarray] = None,
+                 x: Optional[np.ndarray] = None,
+                 checkpoint_every: int = 0):
         self.ctl = ctl
         self.part = part
         self.cfg = cfg
+        self._r = r
+        self._x = x
+        self._ckpt_every = int(checkpoint_every)
         p = part.p
         self._ues = {i: ComputingUEState(pc_max=pc_max_compute)
                      for i in range(p)}
@@ -752,12 +920,7 @@ class ProcContext:
         for i in range(p):
             for d in range(p):
                 if d != i:
-                    self._mail[(i, d)] = ShmRing(
-                        ctl["mail_head"][i, d:d + 1],
-                        ctl["mail_tail"][i, d:d + 1],
-                        ctl["mail_cnt"][i, d],
-                        ctl["mail_idx"][i, d],
-                        ctl["mail_val"][i, d])
+                    self._mail[(i, d)] = _ctl_ring(ctl, i, d)
 
     # -- stop/caps -------------------------------------------------------
     def stopped(self) -> bool:
@@ -823,18 +986,25 @@ class ProcContext:
     def total_pushes(self) -> int:
         return int(self.ctl["pushes"].sum())
 
-    def send(self, i: int, d: int, box: np.ndarray) -> int:
+    def send(self, i: int, d: int, box: np.ndarray,
+             dup: bool = False) -> int:
         rows = np.flatnonzero(box)
         ring = self._mail[(i, d)]
         cap = ring.cap
+        intent = self.ctl["send_intent"]
         shipped = 0
         for lo in range(0, int(rows.size), cap):
             chunk = rows[lo:lo + cap]
             vals = box[chunk]
             mass = float(np.abs(vals).sum())
-            # bump sent_abs BEFORE the push: the mass must be on the
-            # sender's books at every instant it could be folded by the
-            # receiver
+            # record intent, then bump sent_abs BEFORE the push: the mass
+            # must be on the sender's books at every instant it could be
+            # folded by the receiver.  If this worker is killed anywhere
+            # inside the window, the supervisor rolls the uncleared
+            # intent back out of sent_abs — over-counting is sound only
+            # transiently; a *permanent* phantom in-flight payload would
+            # hold this shard's value above target forever.
+            intent[i, d] = mass
             self.ctl["sent_abs"][i, d] += mass
             if not ring.push(chunk.astype(np.int32), vals):
                 # ring full: roll this record's ledger back (the receiver
@@ -844,8 +1014,15 @@ class ProcContext:
                 # (a sound transient over-count) and retries on a later
                 # update.
                 self.ctl["sent_abs"][i, d] -= mass
+                intent[i, d] = 0.0
                 return -1
+            if dup:
+                # wire-level duplicate: same payload, same seq, no ledger
+                # bump — the receiver's seq-deduped fold drops it (best
+                # effort; a full ring just loses the duplicate)
+                ring.push(chunk.astype(np.int32), vals, dup=True)
             box[chunk] = 0.0
+            intent[i, d] = 0.0
             shipped += int(chunk.size)
         return shipped
 
@@ -859,10 +1036,26 @@ class ProcContext:
 
     def report(self, i: int, verdict: bool, it: int) -> bool:
         self.ctl["rounds"][i] = it      # live, so the pump can stamp STOP
+        if self._ckpt_every and self._r is not None \
+                and it % self._ckpt_every == 0:
+            self._checkpoint(i)
         self._ues[i], msg = self._ues[i].step(verdict)
         if msg is not None:
             self._post_msg(i, msg)
         return self.stopped()
+
+    def _checkpoint(self, i: int) -> None:
+        """Seqlock'd per-shard (r, x) checkpoint, written at report time —
+        never mid-sweep, so `busy[i] == 1` implies the checkpoint is
+        committed.  The supervisor restores from it when this worker dies
+        inside a drain."""
+        s, e = self.part.block(i)
+        cs = self.ctl["ckpt_seq"]
+        cs[i] += 1                      # odd: write in progress
+        self.ctl["ckpt_r"][s:e] = self._r[s:e]
+        if self._x is not None:
+            self.ctl["ckpt_x"][s:e] = self._x[s:e]
+        cs[i] += 1                      # even: committed
 
     def idle_wait(self, seconds: float) -> None:
         time.sleep(seconds)
@@ -890,28 +1083,58 @@ def _procpool_worker_main(shard_ids, data_handle: ArenaHandle,
                           ctl_handle: ArenaHandle, part: Partition,
                           plan: ExchangePlan, cfg: WorkerConfig,
                           drain_factory: DrainFactory,
-                          pc_max_compute: int, r_key: str) -> None:
+                          pc_max_compute: int, r_key: str,
+                          x_key: Optional[str] = None,
+                          faults: Optional[FaultPlan] = None,
+                          checkpoint_every: int = 0) -> None:
     """Worker-process entry: attach both arenas, rebuild the drain from
     the factory, and run one `shard_worker_loop` per owned shard (several
     shards share a process when p exceeds the pool — they interleave on
     threads, which only serializes shards that were going to share a core
-    anyway)."""
+    anyway).
+
+    Crash semantics changed with the supervisor: an exception bumps the
+    shard's `err` counter and hard-exits the *process* (exit code 70) —
+    it does NOT stamp STOP.  The parent decides whether to restart (the
+    default) or give up; sibling shard threads die with the process and
+    are restored from their checkpoints exactly like a SIGKILL, so one
+    policy covers both."""
     import traceback
     data = ShardArena.attach(data_handle)
     ctl = ShardArena.attach(ctl_handle)
     try:
         views = {k: data[k] for k in data.keys()}
         r = views[r_key]
+        x = views.get(x_key) if x_key else None
         drain_fn = drain_factory(views)
-        ctx = ProcContext(ctl, part, cfg, pc_max_compute)
+        ctx: TransportContext = ProcContext(
+            ctl, part, cfg, pc_max_compute, r=r, x=x,
+            checkpoint_every=checkpoint_every)
+        if faults is not None:
+            ctx = FaultyContext(ctx, faults, part,
+                                fired=ctl["fault_fired"],
+                                kill_mode="process")
+        busy = ctl["busy"]
+
+        def guarded(i, s, e, t, outbox):
+            # busy flag brackets the sweep: the supervisor restores this
+            # shard from its checkpoint only when the worker died with
+            # the flag up (mid-sweep (x, r) may be torn); a clean-point
+            # death keeps the live rows
+            busy[i] = 1
+            try:
+                return drain_fn(i, s, e, t, outbox)
+            finally:
+                busy[i] = 0
 
         def run_one(i: int) -> None:
             try:
-                shard_worker_loop(i, r, part, plan, cfg, ctx, drain_fn)
+                shard_worker_loop(i, r, part, plan, cfg, ctx, guarded)
             except BaseException:
                 traceback.print_exc()
-                ctl["err"][i] = 1
-                ctl["flags"][_F_STOP] = 1
+                ctl["err"][i] += 1
+                # hard exit: siblings checkpoint-restore like a SIGKILL
+                os._exit(70)
 
         if len(shard_ids) == 1:
             run_one(shard_ids[0])
@@ -925,9 +1148,9 @@ def _procpool_worker_main(shard_ids, data_handle: ArenaHandle,
     except BaseException:               # pragma: no cover - defensive
         import traceback
         traceback.print_exc()
-        ctl["flags"][_F_STOP] = 1
         for i in shard_ids:
-            ctl["err"][i] = 1
+            ctl["err"][i] += 1
+        os._exit(70)
     finally:
         # drop views before detaching the mappings (no unlink: the parent
         # owns both segments)
@@ -956,11 +1179,17 @@ class ProcPoolShardExecutor:
     for more than the machine's cores warns — the oversubscription
     guard — but the explicit request is honored, since one process per
     parked-heavy shard can kernel-schedule better than co-residence),
-    and the parent-side monitor pump.  On return every ring, outbox and pending
-    uniform delta has been folded back into the arena's residual, and
-    both a worker crash and a worker *kill* raise with the control arena
-    released (nothing leaks in /dev/shm; the data arena belongs to the
-    caller).
+    and the parent-side supervisor.  On return every ring, outbox and
+    pending uniform delta has been folded back into the arena's residual.
+
+    Since PR 6 a worker crash or kill no longer aborts the solve: a
+    `ShardSupervisor` restarts the dead worker (checkpoint-restored
+    rows, reconciled ledgers, conservative Fig. 1 re-entry — see
+    supervisor.py) and only an exhausted restart budget raises, with the
+    control arena released either way (nothing leaks in /dev/shm; the
+    data arena belongs to the caller).  Pass `faults=FaultPlan(...)` to
+    inject deterministic kill/hang/drop/dup/delay/slow schedules at the
+    transport seam.
     """
 
     # Coarser drain scheduling than the thread rendering: cross-process
@@ -986,7 +1215,12 @@ class ProcPoolShardExecutor:
                  n_workers: Optional[int] = None,
                  ring_depth: int = 8,
                  ring_payload_cap: int = 4096,
-                 start_method: Optional[str] = None):
+                 start_method: Optional[str] = None,
+                 faults: Optional[FaultPlan] = None,
+                 fault_state: Optional[FaultState] = None,
+                 max_restarts: Optional[int] = None,
+                 restart_backoff: BackoffPolicy = BackoffPolicy(),
+                 checkpoint_every: int = 32):
         if driver.p != part.p or plan.p != part.p:
             raise ValueError(f"partition ({part.p}), plan ({plan.p}) and "
                              f"driver ({driver.p}) disagree on p")
@@ -1015,13 +1249,23 @@ class ProcPoolShardExecutor:
         self.ring_depth = int(ring_depth)
         self.ring_payload_cap = int(ring_payload_cap)
         self.start_method = start_method
+        self.faults = faults if (faults is not None and faults.active) \
+            else None
+        self.fault_state = fault_state
+        self.max_restarts = (2 * self.p if max_restarts is None
+                             else int(max_restarts))
+        self.restart_backoff = restart_backoff
+        self.checkpoint_every = int(checkpoint_every)
 
     # ------------------------------------------------------------------
     def run(self, drain_factory: DrainFactory, data: ShardArena,
-            r_key: str = "r") -> AsyncRunResult:
+            r_key: str = "r", x_key: Optional[str] = None
+            ) -> AsyncRunResult:
         """Drive the drains until STOP or a cap.  `data` must hold the
-        residual under `r_key`; the factory rebuilds the DrainFn from the
-        attached views inside each worker."""
+        residual under `r_key` (and the iterate under `x_key` when the
+        drain maintains one — required for mid-sweep checkpoint restore
+        of x); the factory rebuilds the DrainFn from the attached views
+        inside each worker."""
         import multiprocessing as mp
 
         p, part = self.p, self.part
@@ -1029,6 +1273,7 @@ class ProcPoolShardExecutor:
         if r.shape != (part.n,):
             raise ValueError(f"data arena {r_key!r} has shape {r.shape}, "
                              f"expected ({part.n},)")
+        x = data[x_key] if x_key else None
         t0 = time.perf_counter()
         method = self.start_method or (
             "fork" if "fork" in mp.get_all_start_methods() else "spawn")
@@ -1036,35 +1281,58 @@ class ProcPoolShardExecutor:
         ctl = ShardArena.create(_ctl_spec(p, part.n, part, self.ring_depth,
                                           self.ring_payload_cap),
                                 prefix="repro_arena_ctl")
+        sup: Optional[ShardSupervisor] = None
         procs: List = []
         died = False
         try:
+            # seq 0 is the "nothing folded yet" sentinel on the consumer
+            # side, so producers must start stamping at 1
+            ctl["mail_next_seq"][:] = 1
             for i in range(p):
                 s, e = part.block(i)
                 ctl["values"][i] = float(np.abs(r[s:e]).sum())
-            assign = [[i for i in range(p) if i % self.n_workers == w]
-                      for w in range(self.n_workers)]
-            procs = [mpctx.Process(
-                target=_procpool_worker_main,
-                args=(ids, data.handle(), ctl.handle(), part, self.plan,
-                      self.cfg, drain_factory, self.driver.pc_max_compute,
-                      r_key),
-                name=f"shard-worker-{w}", daemon=True)
-                for w, ids in enumerate(assign) if ids]
-            with warnings.catch_warnings():
-                # jax's at-fork hook warns that the parent is
-                # multithreaded; the workers are numpy-only (they never
-                # enter jax/XLA), so the fork is safe — callers who want
-                # belt-and-braces can pass start_method="spawn" (slower:
-                # workers re-import the stack)
-                warnings.filterwarnings(
-                    "ignore", message=r".*os\.fork\(\) was called.*",
-                    category=RuntimeWarning)
-                for pr in procs:
-                    pr.start()
+            if self.faults is not None and self.fault_state is not None:
+                # kill/hang schedules fire once per *update*: carry the
+                # fired flags across executor runs through the caller's
+                # FaultState
+                ctl["fault_fired"][:] = self.fault_state.fired
+            # checkpoint zero: a worker killed before its first report
+            # restores to the initial rows, not to garbage
+            ctl["ckpt_r"][:] = r
+            if x is not None:
+                ctl["ckpt_x"][:] = x
+            assign = [ids for ids in
+                      ([i for i in range(p) if i % self.n_workers == w]
+                       for w in range(self.n_workers)) if ids]
 
-            died = self._pump(ctl, procs)
-            for pr in procs:
+            def spawn(w: int):
+                pr = mpctx.Process(
+                    target=_procpool_worker_main,
+                    args=(assign[w], data.handle(), ctl.handle(), part,
+                          self.plan, self.cfg, drain_factory,
+                          self.driver.pc_max_compute, r_key, x_key,
+                          self.faults, self.checkpoint_every),
+                    name=f"shard-worker-{w}", daemon=True)
+                with warnings.catch_warnings():
+                    # jax's at-fork hook warns that the parent is
+                    # multithreaded; the workers are numpy-only (they
+                    # never enter jax/XLA), so the fork is safe — callers
+                    # who want belt-and-braces can pass
+                    # start_method="spawn" (slower: workers re-import
+                    # the stack)
+                    warnings.filterwarnings(
+                        "ignore", message=r".*os\.fork\(\) was called.*",
+                        category=RuntimeWarning)
+                    pr.start()
+                return pr
+
+            sup = ShardSupervisor(
+                part, self.driver, ctl, r, x, assign, spawn,
+                max_restarts=self.max_restarts,
+                backoff=self.restart_backoff)
+            procs = [spawn(w) for w in range(len(assign))]
+            died = sup.supervise(procs)
+            for pr in sup.all_procs:
                 pr.join()
 
             # fold every in-flight structure back into r (mass
@@ -1073,13 +1341,9 @@ class ProcPoolShardExecutor:
             flags = ctl["flags"]
             for i in range(p):
                 for d in range(p):
-                    if d == i:
-                        continue
-                    sd, ed = part.block(d)
-                    ShmRing(ctl["mail_head"][i, d:d + 1],
-                            ctl["mail_tail"][i, d:d + 1],
-                            ctl["mail_cnt"][i, d], ctl["mail_idx"][i, d],
-                            ctl["mail_val"][i, d]).pop_into(r[sd:ed])
+                    if d != i:
+                        sd, ed = part.block(d)
+                        _ctl_ring(ctl, i, d).pop_into(r[sd:ed])
                 box = ctl["outbox"][i]
                 nzr = np.flatnonzero(box)
                 if nzr.size:
@@ -1092,15 +1356,22 @@ class ProcPoolShardExecutor:
                     r[s:e] += dc
                     ctl["uni_seen"][i] = total
 
-            errs = np.flatnonzero(ctl["err"])
-            if errs.size:
-                raise RuntimeError(
-                    f"procpool shard worker(s) {errs.tolist()} raised; "
-                    "see worker stderr for the traceback")
+            if self.faults is not None and self.fault_state is not None:
+                self.fault_state.fired[:] = ctl["fault_fired"]
+
             if died:
+                # restart budget exhausted — the PR 5 contract: raise
+                # with surviving mass folded back and /dev/shm released.
+                # (`err` counts are telemetry now: a *recovered* crash
+                # must not raise.)
+                errs = np.flatnonzero(ctl["err"])
+                detail = (f"; shard worker(s) {errs.tolist()} raised — "
+                          "see worker stderr" if errs.size else "")
                 raise RuntimeError(
-                    "procpool shard worker died (killed?) mid-drain; "
-                    "surviving mass has been folded back into r")
+                    "procpool shard worker died mid-drain and the "
+                    f"restart budget ({self.max_restarts}) is exhausted"
+                    f"{detail}; surviving mass has been folded back "
+                    "into r")
 
             return AsyncRunResult(
                 stopped=self.driver.stopped and not bool(flags[_F_CAPPED]),
@@ -1111,59 +1382,16 @@ class ProcPoolShardExecutor:
                 bytes_moved=int(ctl["bytes_moved"].sum()),
                 stop_round=int(flags[_F_STOP_ROUND]),
                 idle_s_per_shard=ctl["idle_s"].copy(),
-                wall_s=time.perf_counter() - t0)
+                wall_s=time.perf_counter() - t0,
+                recoveries=sup.recoveries,
+                recovery_s=sup.recovery_s)
         finally:
-            for pr in procs:
+            for pr in (sup.all_procs if sup is not None and sup.all_procs
+                       else procs):
                 if pr.is_alive():
                     pr.terminate()
                 pr.join(timeout=5.0)
             ctl.close(unlink=True)
-
-    # ------------------------------------------------------------------
-    def _pump(self, ctl: ShardArena, procs) -> bool:
-        """Parent-side monitor pump: deliver ringed CONVERGE/DIVERGE
-        messages to the Fig. 1 monitor machine, stamp STOP into the
-        control flags, and watch worker liveness.  Returns True when a
-        worker died without reporting an error (killed)."""
-        p = self.p
-        flags = ctl["flags"]
-        flags[_F_STOP_ROUND] = -1
-        head, tail, buf = ctl["msg_head"], ctl["msg_tail"], ctl["msg_buf"]
-
-        def drain_msgs() -> bool:
-            """Deliver every pending ringed message to the monitor
-            machine (messages after STOP are drained, not delivered);
-            True when anything moved."""
-            moved = False
-            for i in range(p):
-                h, t = int(head[i]), int(tail[i])
-                while h < t:
-                    code = int(buf[i, h % _MSG_RING_DEPTH])
-                    h += 1
-                    head[i] = h
-                    moved = True
-                    if flags[_F_STOP]:
-                        continue        # drain, but STOP already stamped
-                    if self.driver.monitor_recv(i, Msg(code)):
-                        flags[_F_STOP_ROUND] = int(ctl["rounds"][i])
-                        flags[_F_STOP] = 1
-            return moved
-
-        died = False
-        while True:
-            moved = drain_msgs()
-            alive = [pr.is_alive() for pr in procs]
-            if not any(alive):
-                # one final drain pass so late messages are not stranded
-                drain_msgs()
-                return died
-            if not flags[_F_STOP]:
-                exits = [pr.exitcode for pr in procs]
-                if any(ec is not None and ec != 0 for ec in exits):
-                    died = died or not np.any(ctl["err"])
-                    flags[_F_STOP] = 1
-            if not moved:
-                time.sleep(5e-4)
 
 
 # ---------------------------------------------------------------------------

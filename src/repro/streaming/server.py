@@ -38,8 +38,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .delta import DeltaGraph, EdgeDelta, FrozenGraphView, merge_deltas
-from .incremental import (RankState, UpdateStats, cold_state, ppr_push,
-                          refresh_residual, update_ranks)
+from .incremental import (RankState, UpdateStats, _exact_residual,
+                          cold_state, ppr_push, refresh_residual,
+                          update_ranks)
 from .sharded import ShardedUpdateStats, update_ranks_sharded
 
 
@@ -145,6 +146,16 @@ class RankServer:
         self.queries_served = 0
         self.last_stats = None   # UpdateStats | ShardedUpdateStats
 
+        # degrade-gracefully state (PR 6): a daemon-updater failure no
+        # longer dies silently — it is captured here, the working state is
+        # re-materialized, and the loop retries with backoff while queries
+        # keep answering from the last certified snapshot
+        self.last_error: Optional[Dict[str, object]] = None
+        self.consecutive_failures = 0
+        self.updater_restarts = 0
+        self._REQUEUE_CAP = 3
+        self._requeue_budget = self._REQUEUE_CAP
+
     # ------------------------------------------------------------------
     # the swap protocol
     # ------------------------------------------------------------------
@@ -189,18 +200,32 @@ class RankServer:
             if not batch:
                 return None
             merged = merge_deltas(batch)
-            if self.updater == "sharded":
-                self._state, stats = update_ranks_sharded(
-                    self.dg, merged, self._state, tol=self.tol,
-                    p=self.shards, exchange=self.exchange,
-                    mode=self.shard_mode, transport=self.shard_transport,
-                    n_workers=self.shard_workers,
-                    backend=self.backend, method=self.method)
-            else:
-                self._state, stats = update_ranks(
-                    self.dg, merged, self._state, tol=self.tol,
-                    backend=self.backend, method=self.method,
-                    push_frontier_frac=self.push_frontier_frac)
+            ver0 = self.dg.version
+            try:
+                if self.updater == "sharded":
+                    self._state, stats = update_ranks_sharded(
+                        self.dg, merged, self._state, tol=self.tol,
+                        p=self.shards, exchange=self.exchange,
+                        mode=self.shard_mode,
+                        transport=self.shard_transport,
+                        n_workers=self.shard_workers,
+                        backend=self.backend, method=self.method)
+                else:
+                    self._state, stats = update_ranks(
+                        self.dg, merged, self._state, tol=self.tol,
+                        backend=self.backend, method=self.method,
+                        push_frontier_frac=self.push_frontier_frac)
+            except BaseException:
+                # the batch is only safe to retry when the graph did NOT
+                # advance (a failure after dg.apply means the delta is
+                # already in the graph — re-enqueueing would double-apply
+                # it); a bounded retry budget keeps a poisoned batch from
+                # cycling forever
+                if self.dg.version == ver0 and self._requeue_budget > 0:
+                    self._requeue_budget -= 1
+                    self._queue.put(merged)
+                raise
+            self._requeue_budget = self._REQUEUE_CAP
             fell_back = stats.path not in ("push", "sharded_push")
             self._batches_since_refresh += 1
             if fell_back:
@@ -223,21 +248,115 @@ class RankServer:
     # ------------------------------------------------------------------
     # async updater (update-while-serve)
     # ------------------------------------------------------------------
-    def start(self, poll_s: float = 0.01) -> None:
+    def start(self, poll_s: float = 0.01, backoff_base_s: float = 0.05,
+              backoff_cap_s: float = 2.0) -> None:
+        """Run the updater as a daemon thread.  An unhandled updater
+        exception no longer kills the thread silently (the pre-PR 6
+        failure mode: the server served forever-stale data with no
+        signal): it is captured into `last_error`, the working state is
+        re-materialized (`_recover_state`), and the loop retries with
+        capped exponential backoff — queries keep answering from the
+        last certified snapshot throughout.  `health()` surfaces all of
+        it."""
         if self._thread is not None:
             raise RuntimeError("updater already running")
         self._stop_evt.clear()
 
         def run():
+            import traceback
             while not self._stop_evt.is_set():
                 if self._queue.empty():
                     self._stop_evt.wait(poll_s)
                     continue
-                self.apply_pending()
+                try:
+                    self.apply_pending()
+                except Exception as exc:
+                    with self._stat_lock:
+                        self.consecutive_failures += 1
+                        self.updater_restarts += 1
+                        self.last_error = dict(
+                            time=time.time(), error=repr(exc),
+                            traceback=traceback.format_exc())
+                        fails = self.consecutive_failures
+                    try:
+                        self._recover_state()
+                    except Exception:   # pragma: no cover - last resort
+                        pass            # keep serving; next pass retries
+                    self._stop_evt.wait(min(
+                        backoff_base_s * (2.0 ** (fails - 1)),
+                        backoff_cap_s))
+                else:
+                    with self._stat_lock:
+                        self.consecutive_failures = 0
 
         self._thread = threading.Thread(
             target=run, name="rank-updater", daemon=True)
         self._thread.start()
+
+    def _recover_state(self) -> None:
+        """Re-materialize a consistent working state after an updater
+        failure.  A failure *before* `dg.apply` leaves the state valid
+        (just re-derive the residual exactly); a failure *after* leaves
+        the state a version behind the graph — pad the iterate to the new
+        node count and rebuild the exact residual against the current
+        graph, falling back to a cold solve if even that fails.  The
+        stable snapshot is untouched: it stays the last *certified*
+        publish, and the recovered state only reaches readers after the
+        next successful (certified) update."""
+        with self._lock:
+            st = self._state
+            n = self.dg.n
+            try:
+                if st.v is not None and (st.x.shape[0] != n
+                                         or st.version != self.dg.version):
+                    # a custom teleport vector cannot be padded to new
+                    # nodes meaningfully — rebuild from scratch
+                    raise ValueError("custom-v state behind the graph")
+                if st.x.shape[0] != n or st.version != self.dg.version:
+                    x = np.zeros(n)
+                    m = min(int(st.x.shape[0]), n)
+                    x[:m] = st.x[:m]
+                    self._state = RankState(
+                        x=x, r=_exact_residual(self.dg, x, self.alpha,
+                                               st.v),
+                        version=self.dg.version, alpha=st.alpha, v=st.v)
+                else:
+                    # same version/shape: the iterate is fine, only the
+                    # maintained residual is suspect — re-derive it
+                    refresh_residual(self.dg, st)
+            except Exception:
+                self._state = cold_state(
+                    self.dg, alpha=self.alpha, tol=self.tol,
+                    backend=self.backend, method=self.method)
+            self._batches_since_refresh = 0
+
+    def health(self) -> Dict[str, object]:
+        """Liveness + degradation signal for operators/load-balancers.
+
+        status: "ok" (serving, updater healthy), "degraded" (serving
+        from the last certified snapshot while the updater recovers from
+        failures), "dead" (updater thread exited unexpectedly — should
+        be unreachable, the run loop traps exceptions)."""
+        snap = self._snapshot
+        started = self._thread is not None
+        alive = bool(started and self._thread.is_alive())
+        with self._stat_lock:
+            last_error = self.last_error
+            fails = self.consecutive_failures
+            restarts = self.updater_restarts
+        if started and not alive and not self._stop_evt.is_set():
+            status = "dead"
+        elif fails > 0:
+            status = "degraded"
+        else:
+            status = "ok"
+        return dict(
+            status=status, updater_started=started, updater_alive=alive,
+            last_error=last_error, consecutive_failures=fails,
+            updater_restarts=restarts, snapshot_seq=int(snap.seq),
+            snapshot_cert=float(snap.cert),
+            version_lag=int(max(self.dg.version - snap.version, 0)),
+            pending_deltas=int(self._queue.qsize()))
 
     def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
         if self._thread is None:

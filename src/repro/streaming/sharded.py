@@ -54,6 +54,7 @@ from ..core.partition import Partition, block_rows
 from ..runtime.driver import TerminationDriver
 from ..runtime.exchange import AllToAllPlan, ExchangePlan, SparsifiedPlan
 from ..runtime.executor import AsyncShardExecutor
+from ..runtime.faults import FaultPlan
 from ..runtime.state import ShardArena
 from ..runtime.transport import ProcPoolShardExecutor
 from .delta import DeltaGraph, EdgeDelta
@@ -84,6 +85,8 @@ class ShardedUpdateStats:
     attempts: int = 1          # async drain entries (>1 = STOP raced mass
                                # in flight and the drain was re-entered)
     transport: str = "threads"  # "threads" | "procpool" (async mode only)
+    recoveries: int = 0        # supervised worker restarts (faults/crashes)
+    recovery_s: float = 0.0    # total detection -> respawned time
 
 
 def _scatter_add(out: np.ndarray, idx: np.ndarray,
@@ -234,7 +237,9 @@ def update_ranks_sharded(
         max_supersteps: int = 10_000, max_push_factor: float = 40.0,
         backend: str = "segment_sum", method: str = "linear",
         solver_max_iters: int = 1000,
-        bytes_per_entry: int = 8) -> Tuple[RankState, ShardedUpdateStats]:
+        bytes_per_entry: int = 8,
+        faults: Optional[FaultPlan] = None
+        ) -> Tuple[RankState, ShardedUpdateStats]:
     """Apply `delta` and certify the updated ranks with p shards.
 
     Mirrors `update_ranks` (same RankState in/out, same exact residual
@@ -251,11 +256,19 @@ def update_ranks_sharded(
     all-reduced sum, the async bound is the exact post-fold recompute —
     under either transport).
 
-    A procpool worker crash (or kill) raises RuntimeError with the shared
-    segments released and the surviving mass folded back; a worker killed
-    *mid-sweep* may leave (x, r) inconsistent, so re-certify via
+    `faults=FaultPlan(...)` (async mode only) injects a deterministic
+    seeded fault schedule — worker kill/hang, exchange drop/dup/delay,
+    slow shards — at the transport seam (runtime/faults.py).  Killed
+    procpool workers are restarted by the `ShardSupervisor` (threads
+    restart the worker loop in place); whenever faults were injected or
+    recoveries happened, the residual is re-derived with the exact O(nnz)
+    recompute and the drain re-entered until the *exact* residual meets
+    the target, so the published certificate stays sound across any
+    recovered schedule.  Only an exhausted restart budget still raises
+    RuntimeError — with the shared segments released and the surviving
+    mass folded back; after such an abort re-certify via
     `refresh_residual` (or rebuild via `cold_state`) before trusting the
-    state after such a crash.
+    state.
     """
     if state.version != dg.version:
         raise ValueError(
@@ -274,6 +287,10 @@ def update_ranks_sharded(
     if transport == "procpool" and mode != "async":
         raise ValueError("transport='procpool' requires mode='async' "
                          "(the superstep loop is a host loop)")
+    faulty = faults is not None and faults.active
+    if faulty and mode != "async":
+        raise ValueError("faults= requires mode='async' (the superstep "
+                         "loop has no transport seam to inject at)")
     if delta.new_nodes and state.v is not None:
         raise NotImplementedError(
             "node arrivals with a custom teleport vector are not "
@@ -333,6 +350,12 @@ def update_ranks_sharded(
         idle_s = 0.0
         capped = False
         attempts = 0
+        recoveries = 0
+        recovery_s = 0.0
+        # kill/hang schedules fire once per *update*, so the fired flags
+        # live here and cross every drain attempt (and, in procpool,
+        # every worker restart via the control arena)
+        fstate = faults.state(p) if faulty else None
         try:
             resid = float(np.abs(r_run).sum())
             # always enter at least once (even an already-converged
@@ -356,14 +379,16 @@ def update_ranks_sharded(
                         part, plan, driver, l1_target=l1_target,
                         bytes_per_entry=bytes_per_entry,
                         max_rounds=100 * max_supersteps,
-                        max_total_pushes=push_budget, n_workers=n_workers)
-                    res = ex.run(factory, arena)
+                        max_total_pushes=push_budget, n_workers=n_workers,
+                        faults=faults, fault_state=fstate)
+                    res = ex.run(factory, arena, x_key="x")
                 else:
                     ex = AsyncShardExecutor(
                         part, plan, driver, l1_target=l1_target,
                         bytes_per_entry=bytes_per_entry,
                         max_rounds=100 * max_supersteps,
-                        max_total_pushes=push_budget)
+                        max_total_pushes=push_budget,
+                        faults=faults, fault_state=fstate)
                     res = ex.run(drain_fn, r_run)
                 pushes_per_shard += res.pushes_per_shard
                 exchanges += res.exchanges
@@ -372,6 +397,16 @@ def update_ranks_sharded(
                 stop_round = res.stop_round
                 idle_s += float(res.idle_s_per_shard.sum())
                 capped = res.capped
+                recoveries += res.recoveries
+                recovery_s += res.recovery_s
+                if faulty or res.recoveries:
+                    # faults (and checkpoint-restored restarts) leave the
+                    # maintained residual only *boundedly* approximate:
+                    # re-derive it exactly from the iterate, so both the
+                    # re-entry decision and the published certificate
+                    # stand on the exact O(nnz) recompute
+                    x_cur = arena["x"] if arena is not None else x
+                    r_run[:] = _exact_residual(dg, x_cur, alpha, state.v)
                 resid = float(np.abs(r_run).sum())
         finally:
             if arena is not None:
@@ -390,7 +425,8 @@ def update_ranks_sharded(
                 bytes_moved=bytes_moved, seed_l1=seed_l1, resid_l1=resid,
                 cert=resid / (1.0 - alpha), stop_superstep=stop_round,
                 mode=mode, idle_s=idle_s, attempts=attempts,
-                transport=transport)
+                transport=transport, recoveries=recoveries,
+                recovery_s=recovery_s)
         return _solver_fallback(
             dg, state, alpha=alpha, tol=tol, method=method,
             backend=backend, solver_max_iters=solver_max_iters,
@@ -398,7 +434,8 @@ def update_ranks_sharded(
                           pushes_per_shard=pushes_per_shard,
                           exchanges=exchanges, bytes_moved=bytes_moved,
                           seed_l1=seed_l1, mode=mode, idle_s=idle_s,
-                          attempts=max(attempts, 1), transport=transport))
+                          attempts=max(attempts, 1), transport=transport,
+                          recoveries=recoveries, recovery_s=recovery_s))
 
     local_target = l1_target / (2.0 * p)
     plan = _make_plan(exchange, p, l1_target, sparsify_thresh,

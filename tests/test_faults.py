@@ -1,0 +1,394 @@
+"""Fault injection + self-healing shard runtime (PR 6).
+
+Covers the FaultPlan seam (drop retention, dup dedupe, delay reordering,
+kill/hang schedules), supervised recovery on both transports with sound
+certificates, the idempotent-fold hardening of the channels and ledgers,
+the stale /dev/shm sweep, the RankServer degrade-gracefully loop, the
+seeded property test (any plan with kills < p and drop < 1 certifies), and
+the 50k chaos acceptance run.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (resolves the runtime<->core import cycle)
+from repro.core.partition import block_rows
+from repro.graph.generate import powerlaw_webgraph
+from repro.runtime import (AllToAllPlan, FaultPlan, ProcPoolShardExecutor,
+                           ShardArena, TerminationDriver,
+                           sweep_stale_segments)
+from repro.streaming import (DeltaGraph, EdgeDelta, cold_state,
+                             update_ranks_sharded)
+from repro.streaming.incremental import RankState, _exact_residual
+from repro.streaming.server import RankServer
+
+
+def _shm_leftovers():
+    try:
+        return [f for f in os.listdir("/dev/shm")
+                if f.startswith("repro_arena")]
+    except FileNotFoundError:        # pragma: no cover - non-Linux
+        return []
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan validation + determinism
+# ---------------------------------------------------------------------------
+def test_fault_plan_validation():
+    FaultPlan()                       # inert plan is fine
+    assert not FaultPlan().active
+    assert FaultPlan(drop_rate=0.2).active
+    assert FaultPlan(kill={0: 3}).active
+    with pytest.raises(ValueError, match="drop_rate"):
+        FaultPlan(drop_rate=1.0)
+    with pytest.raises(ValueError, match="dup_rate"):
+        FaultPlan(dup_rate=-0.1)
+    with pytest.raises(ValueError, match="sum"):
+        FaultPlan(drop_rate=0.5, dup_rate=0.3, delay_rate=0.2)
+    with pytest.raises(ValueError, match="pushes/s"):
+        FaultPlan(slow={1: 0.0})
+    with pytest.raises(ValueError, match="seconds"):
+        FaultPlan(hang={0: (2, -1.0)})
+    with pytest.raises(ValueError, match="max_delay_rounds"):
+        FaultPlan(max_delay_rounds=0)
+
+
+def test_faulty_context_link_schedule_is_seed_deterministic():
+    """The per-(src, dst) RNG streams depend only on (seed, src, dst) —
+    the same plan replays the same link decisions regardless of how the
+    wrapper instances interleave."""
+    from repro.runtime.faults import FaultyContext
+
+    class _Sink:
+        def send(self, i, d, box, dup=False):
+            nz = int(np.count_nonzero(box))
+            box[:] = 0.0
+            return nz
+
+    part = block_rows(12, 3)
+    plan = FaultPlan(seed=42, drop_rate=0.4, dup_rate=0.2)
+
+    def decisions():
+        fc = FaultyContext(_Sink(), plan, part,
+                           fired=np.zeros((2, 3), dtype=np.int64),
+                           kill_mode="thread")
+        out = []
+        for _ in range(40):
+            box = np.ones(4)
+            out.append(fc.send(0, 1, box))
+        return out
+
+    assert decisions() == decisions()
+
+
+# ---------------------------------------------------------------------------
+# channel hardening: dup dedupe + ledgers under duplication
+# ---------------------------------------------------------------------------
+def test_pair_mailbox_dedupes_duplicate_and_stale_seqs():
+    from repro.runtime import PairMailbox
+    mb = PairMailbox(4)
+    mb.deposit(np.array([1.0, 0.0, 2.0, 0.0]), seq=1)
+    mb.deposit(np.array([1.0, 0.0, 2.0, 0.0]), seq=1)   # wire duplicate
+    mb.deposit(np.array([0.0, 5.0, 0.0, 0.0]), seq=2)
+    mb.deposit(np.array([9.0, 9.0, 9.0, 9.0]), seq=1)   # stale replay
+    r = np.zeros(4)
+    assert mb.drain_into(r, 0, 4) == pytest.approx(8.0)
+    np.testing.assert_allclose(r, [1.0, 5.0, 2.0, 0.0])
+    # un-seq'd deposits keep the original always-fold semantics
+    mb.deposit(np.array([1.0, 0.0, 0.0, 0.0]))
+    mb.deposit(np.array([1.0, 0.0, 0.0, 0.0]))
+    r[:] = 0.0
+    assert mb.drain_into(r, 0, 4) == pytest.approx(2.0)
+
+
+def test_shm_ring_seq_dedupe_and_dup_push():
+    from repro.runtime.transport import ShmRing
+    depth, cap = 4, 8
+    arena = ShardArena.create(dict(
+        head=((1,), np.int64), tail=((1,), np.int64),
+        cnt=((depth,), np.int64), idx=((depth, cap), np.int32),
+        val=((depth, cap), np.float64), seq=((depth,), np.int64),
+        nxt=((1,), np.int64), last=((1,), np.int64)))
+    try:
+        ring = ShmRing(arena["head"], arena["tail"], arena["cnt"],
+                       arena["idx"], arena["val"], seq=arena["seq"],
+                       next_seq=arena["nxt"], last_seq=arena["last"])
+        rows = np.array([0, 2], np.int32)
+        vals = np.array([1.0, -2.0])
+        assert ring.push(rows, vals)
+        assert ring.push(rows, vals, dup=True)    # same seq, wire dup
+        assert ring.push(np.array([1], np.int32), np.array([4.0]))
+        out = np.zeros(4)
+        assert ring.pop_into(out) == pytest.approx(7.0)  # dup not folded
+        np.testing.assert_allclose(out, [1.0, 4.0, -2.0, 0.0])
+        # a crash-replayed record (stale seq) is skipped too
+        assert ring.push(rows, vals, dup=True)
+        assert ring.pop_into(out) == pytest.approx(0.0)
+    finally:
+        arena.close()
+
+
+def test_shm_ring_pending_l1_counts_unfolded_mass_once():
+    """The supervisor's recv_abs reconciliation reads the ring's actual
+    pending mass: folded records and wire duplicates must not count."""
+    from repro.runtime.transport import ShmRing
+    depth, cap = 6, 8
+    arena = ShardArena.create(dict(
+        head=((1,), np.int64), tail=((1,), np.int64),
+        cnt=((depth,), np.int64), idx=((depth, cap), np.int32),
+        val=((depth, cap), np.float64), seq=((depth,), np.int64),
+        nxt=((1,), np.int64), last=((1,), np.int64)))
+    try:
+        ring = ShmRing(arena["head"], arena["tail"], arena["cnt"],
+                       arena["idx"], arena["val"], seq=arena["seq"],
+                       next_seq=arena["nxt"], last_seq=arena["last"])
+        assert ring.pending_l1() == 0.0
+        ring.push(np.array([0], np.int32), np.array([2.0]))
+        out = np.zeros(4)
+        ring.pop_into(out)                                   # folded
+        ring.push(np.array([1, 2], np.int32), np.array([1.0, -3.0]))
+        ring.push(np.array([1, 2], np.int32), np.array([1.0, -3.0]),
+                  dup=True)                                  # wire dup
+        assert ring.pending_l1() == pytest.approx(4.0)       # once, not 8
+        ring.pop_into(out)
+        assert ring.pending_l1() == 0.0
+    finally:
+        arena.close()
+
+
+def test_proc_context_ledgers_conserve_under_duplication():
+    """A dup'd send bumps sent_abs once and the receiver folds it once:
+    inflight nets to zero, and the folded mass equals the shipped mass."""
+    from repro.runtime.transport import ProcContext, WorkerConfig, _ctl_spec
+    p, n = 2, 16
+    part = block_rows(n, p)
+    ctl = ShardArena.create(_ctl_spec(p, n, part, ring_depth=8,
+                                      payload_cap=16))
+    try:
+        ctx = ProcContext(ctl, part, WorkerConfig(l1_target=1e-9),
+                          pc_max_compute=1)
+        sd, ed = part.block(1)
+        box = ctx.outbox(0)
+        box[sd:ed] = 0.25
+        ctx.send(0, 1, box[sd:ed], dup=True)      # wire-duplicated send
+        assert float(ctl["sent_abs"][0, 1]) == pytest.approx(0.25 * (ed - sd))
+        r = np.zeros(n)
+        assert ctx.fold_intake(1, r, sd, ed)
+        np.testing.assert_allclose(r[sd:ed], 0.25)    # folded exactly once
+        assert ctx.inflight_l1(0) == pytest.approx(0.0)
+        assert float(ctl["send_intent"][0, 1]) == 0.0
+    finally:
+        ctl.close()
+
+
+# ---------------------------------------------------------------------------
+# recovery on both transports, certificates stay sound
+# ---------------------------------------------------------------------------
+def _small_update(transport, faults, p=3, tol=1e-7, seed=17):
+    g = powerlaw_webgraph(n=1500, target_nnz=11000, n_dangling=8, seed=seed)
+    dg = DeltaGraph(g)
+    st = cold_state(dg, tol=1e-9)
+    rng = np.random.default_rng(seed + 1)
+    d = EdgeDelta.inserts(rng.integers(0, dg.n, 10),
+                          rng.integers(0, dg.n, 10))
+    st, stats = update_ranks_sharded(dg, d, st, p=p, tol=tol, mode="async",
+                                     transport=transport, faults=faults)
+    assert stats.cert <= tol, stats
+    # the published certificate is sound: exact residual agrees
+    r_exact = _exact_residual(dg, st.x, st.alpha, st.v)
+    assert float(np.abs(r_exact).sum()) / (1.0 - st.alpha) <= tol * 1.01
+    return stats
+
+
+def test_threads_kill_recovers_and_certifies():
+    stats = _small_update("threads", FaultPlan(seed=1, kill={0: 4, 2: 9}))
+    assert stats.recoveries >= 1
+
+
+def test_threads_drop_dup_delay_certifies():
+    stats = _small_update("threads", FaultPlan(
+        seed=2, drop_rate=0.15, dup_rate=0.10, delay_rate=0.10,
+        max_delay_rounds=4))
+    assert stats.recoveries == 0      # no kills scheduled
+
+
+def test_threads_hang_and_slow_certify():
+    _small_update("threads", FaultPlan(seed=3, hang={1: (3, 0.05)},
+                                       slow={0: 5e5}))
+
+
+def test_procpool_kill_recovers_and_certifies():
+    stats = _small_update("procpool", FaultPlan(seed=4, kill={1: 5}))
+    assert stats.recoveries >= 1
+    assert stats.recovery_s >= 0.0
+    assert not _shm_leftovers()
+
+
+def test_procpool_drop_dup_certifies():
+    stats = _small_update("procpool", FaultPlan(seed=5, drop_rate=0.10,
+                                                dup_rate=0.10))
+    assert stats.recoveries == 0
+    assert not _shm_leftovers()
+
+
+def test_faults_rejected_outside_async_mode():
+    g = powerlaw_webgraph(n=300, target_nnz=2400, n_dangling=2, seed=9)
+    dg = DeltaGraph(g)
+    st = cold_state(dg, tol=1e-8)
+    with pytest.raises(ValueError, match="async"):
+        update_ranks_sharded(dg, EdgeDelta.empty(), st, mode="superstep",
+                             faults=FaultPlan(drop_rate=0.1))
+
+
+def test_thread_transport_restart_budget_exhaustion_raises():
+    """A kill schedule the budget cannot absorb fails loudly (the PR 5
+    fail-fast contract survives for unrecoverable runs)."""
+    from repro.runtime import (AsyncShardExecutor, FaultPlan,
+                               TerminationDriver)
+    p, n = 2, 40
+    part = block_rows(n, p)
+    r = np.ones(n)
+
+    def drain_fn(i, s, e, step_target, outbox):
+        own = r[s:e]
+        if float(np.abs(own).sum()) <= step_target:
+            return 0, 0.0
+        own *= 0.5
+        return 1, 0.0
+
+    ex = AsyncShardExecutor(part, AllToAllPlan(p), TerminationDriver(p),
+                            l1_target=1e-300, max_rounds=10**6,
+                            faults=FaultPlan(kill={0: 2}), max_restarts=0)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        ex.run(drain_fn, r)
+
+
+# ---------------------------------------------------------------------------
+# stale /dev/shm sweep
+# ---------------------------------------------------------------------------
+def test_stale_segment_sweep_reclaims_dead_pid_only():
+    dead = "/dev/shm/repro_arena_999999999_deadbeef"     # no such pid
+    alive = "/dev/shm/repro_arena_1_deadbeef"            # pid 1 exists
+    for f in (dead, alive):
+        with open(f, "wb") as fh:
+            fh.write(b"\0" * 64)
+    try:
+        sweep_stale_segments("repro_arena")
+        assert not os.path.exists(dead)
+        assert os.path.exists(alive)
+        # create() runs the sweep too: plant another orphan and allocate
+        with open(dead, "wb") as fh:
+            fh.write(b"\0" * 64)
+        arena = ShardArena.create(dict(r=((4,), np.float64)))
+        arena.close()
+        assert not os.path.exists(dead)
+        assert os.path.exists(alive)
+    finally:
+        for f in (dead, alive):
+            if os.path.exists(f):
+                os.unlink(f)
+
+
+def test_sweep_ignores_foreign_and_own_segments():
+    sweep_stale_segments("repro_arena")       # clear strays from earlier
+    arena = ShardArena.create(dict(r=((4,), np.float64)))
+    try:
+        assert sweep_stale_segments("repro_arena") == 0   # own pid: kept
+        assert arena.name in os.listdir("/dev/shm")
+    finally:
+        arena.close()
+
+
+# ---------------------------------------------------------------------------
+# RankServer degrade-gracefully serving
+# ---------------------------------------------------------------------------
+def test_rank_server_health_and_updater_auto_restart(monkeypatch):
+    import repro.streaming.server as srvmod
+    g = powerlaw_webgraph(n=800, target_nnz=6000, n_dangling=4, seed=11)
+    dg = DeltaGraph(g)
+    srv = RankServer(dg, tol=1e-7)
+    h0 = srv.health()
+    assert h0["status"] == "ok" and not h0["updater_started"]
+
+    snap_before = srv.snapshot()
+    orig = srvmod.update_ranks
+    calls = [0]
+
+    def flaky(*a, **k):
+        calls[0] += 1
+        if calls[0] <= 2:
+            raise RuntimeError("synthetic updater failure")
+        return orig(*a, **k)
+
+    monkeypatch.setattr(srvmod, "update_ranks", flaky)
+    srv.start(poll_s=0.003, backoff_base_s=0.01, backoff_cap_s=0.05)
+    try:
+        rng = np.random.default_rng(0)
+        srv.ingest(EdgeDelta.inserts(rng.integers(0, dg.n, 3),
+                                     rng.integers(0, dg.n, 3)))
+        deadline = time.time() + 30
+        degraded_seen = False
+        while time.time() < deadline:
+            h = srv.health()
+            degraded_seen = degraded_seen or h["status"] == "degraded"
+            # queries keep answering from the last certified snapshot
+            ids, vals = srv.top_k(3)
+            assert len(ids) == 3
+            # batches_applied bumps inside apply_pending but the
+            # failure counter resets only after it returns — wait for
+            # the full recovered state, not the mid-reset window
+            if (h["updater_restarts"] >= 2 and srv.batches_applied >= 1
+                    and h["status"] == "ok"):
+                break
+            time.sleep(0.01)
+        h = srv.health()
+        assert h["updater_restarts"] >= 2, h
+        assert h["last_error"] is not None
+        assert "synthetic updater failure" in str(h["last_error"]["error"])
+        assert degraded_seen
+        assert srv.batches_applied >= 1          # the re-enqueued batch
+        assert h["status"] == "ok" and h["consecutive_failures"] == 0
+    finally:
+        srv.stop()
+    snap = srv.snapshot()
+    assert snap.seq > snap_before.seq            # recovery re-published
+    assert snap.version == dg.version
+    assert snap.cert <= 1e-7
+
+
+def test_rank_server_recover_state_rebuilds_behind_graph():
+    g = powerlaw_webgraph(n=600, target_nnz=4500, n_dangling=3, seed=13)
+    dg = DeltaGraph(g)
+    srv = RankServer(dg, tol=1e-7)
+    # simulate "failure after dg.apply": the graph advances, the working
+    # state does not
+    dg.apply(EdgeDelta.inserts(np.array([1, 2]), np.array([3, 4])))
+    assert srv._state.version != dg.version
+    srv._recover_state()
+    assert srv._state.version == dg.version
+    r_exact = _exact_residual(dg, srv._state.x, srv.alpha, srv._state.v)
+    np.testing.assert_allclose(srv._state.r, r_exact, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 6 chaos acceptance: p=4 procpool, 1% delta, 50k graph, mid-drain
+# kill + 10% seeded drop/duplicate — recovers, certifies vs cold solve
+# ---------------------------------------------------------------------------
+def test_accept_chaos_procpool_kill_drop_dup_50k(accept_graph, accept_delta,
+                                                 accept_cold, accept_base):
+    tol = 1e-8
+    dg = DeltaGraph(accept_graph)
+    st_run = RankState(x=accept_base.x.copy(), r=accept_base.r.copy(),
+                       version=0, alpha=accept_base.alpha)
+    plan = FaultPlan(seed=7, kill={1: 40}, drop_rate=0.10, dup_rate=0.10)
+    st_run, stats = update_ranks_sharded(dg, accept_delta, st_run, p=4,
+                                         tol=tol, mode="async",
+                                         transport="procpool", faults=plan)
+    # no error surfaced, the kill really happened and was recovered
+    assert stats.recoveries >= 1, stats
+    assert stats.cert <= tol, stats
+    l1 = np.abs(st_run.x - accept_cold).sum()
+    assert l1 <= 2 * tol, (l1, stats)
+    assert not _shm_leftovers()

@@ -1,0 +1,74 @@
+"""Property test over the fault space (PR 6): any seeded FaultPlan with a
+total kill budget the runtime can absorb and drop_rate < 1 must still
+drive the 5k-graph update to a sound certificate, on both transports.
+
+Module-level importorskip (same idiom as test_property_async.py): the
+local image may not ship hypothesis; CI installs it.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+import repro.core  # noqa: F401,E402  (resolves the runtime<->core cycle)
+from repro.graph.generate import powerlaw_webgraph  # noqa: E402
+from repro.runtime import FaultPlan  # noqa: E402
+from repro.streaming import (DeltaGraph, EdgeDelta, cold_state,  # noqa: E402
+                             update_ranks_sharded)
+from repro.streaming.incremental import RankState, _exact_residual  # noqa: E402
+
+_P = 3
+_PROP_TOL = 1e-6
+
+
+@pytest.fixture(scope="module")
+def prop_state():
+    """5k graph, delta pre-applied; every example re-drains the same exact
+    warm residual (the state copies keep examples independent)."""
+    g = powerlaw_webgraph(n=5000, target_nnz=40000, n_dangling=25, seed=77)
+    dg = DeltaGraph(g)
+    base = cold_state(dg, tol=1e-8)
+    rng = np.random.default_rng(78)
+    dg.apply(EdgeDelta.inserts(rng.integers(0, dg.n, 15),
+                               rng.integers(0, dg.n, 15)))
+    r0 = _exact_residual(dg, base.x, base.alpha, base.v)
+    return dg, base, r0
+
+
+_plan_strategy = st.builds(
+    FaultPlan,
+    seed=st.integers(0, 2**16),
+    kill=st.dictionaries(st.integers(0, _P - 1), st.integers(1, 30),
+                         max_size=_P - 1),          # kill-count < p
+    drop_rate=st.sampled_from([0.0, 0.05, 0.2, 0.5]),   # drop < 1.0
+    dup_rate=st.sampled_from([0.0, 0.1]),
+    delay_rate=st.sampled_from([0.0, 0.1]),
+)
+
+
+def _prop_run(prop_state, plan, transport):
+    dg, base, r0 = prop_state
+    st_run = RankState(x=base.x.copy(), r=r0.copy(),
+                       version=dg.version, alpha=base.alpha, v=base.v)
+    st_run, stats = update_ranks_sharded(
+        dg, EdgeDelta.empty(), st_run, p=_P, tol=_PROP_TOL, mode="async",
+        transport=transport, faults=plan)
+    assert stats.cert <= _PROP_TOL, (plan, stats)
+    r_exact = _exact_residual(dg, st_run.x, st_run.alpha, st_run.v)
+    assert float(np.abs(r_exact).sum()) / (1.0 - st_run.alpha) \
+        <= _PROP_TOL * 1.01, plan
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(plan=_plan_strategy)
+def test_property_faulty_threads_still_certifies(prop_state, plan):
+    _prop_run(prop_state, plan, "threads")
+
+
+@settings(max_examples=2, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(plan=_plan_strategy)
+def test_property_faulty_procpool_still_certifies(prop_state, plan):
+    _prop_run(prop_state, plan, "procpool")
