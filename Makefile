@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast chaos bench-quick bench verify stream-demo
+.PHONY: test test-fast chaos bench-quick bench verify stream-demo trace-demo
 
 test:
 	$(PY) -m pytest -q
@@ -25,12 +25,21 @@ bench:
 stream-demo:
 	$(PY) examples/streaming_rank_server.py
 
+# observability demo (PR 7): p=4 procpool solve under a seeded mid-drain
+# worker kill, traced end to end and exported as Chrome trace_event JSON
+# -> benchmarks/results/observe_trace_p4_procpool.json (open in Perfetto
+# or chrome://tracing; one track per shard, see docs/observability.md)
+trace-demo:
+	$(PY) -m benchmarks.observe_bench --trace-demo
+
 # tier-1 gate + the quick benchmark pass that refreshes BENCH_PR<N>.json
-# (currently BENCH_PR6.json; see benchmarks/run.py --out) — run before
+# (currently BENCH_PR7.json; see benchmarks/run.py --out) — run before
 # every PR.  The measured suite runtime is embedded in the BENCH file so
 # benchmarks/check_tier1_runtime.py can gate against the best of the last
-# two PRs instead of the frozen PR2 snapshot.
+# two PRs instead of the frozen PR2 snapshot; the observe gate then
+# asserts the observe=off hot path stayed within 3% of the pre-PR burn.
 verify:
 	@start=$$(date +%s) && $(PY) -m pytest -q && \
 	echo $$(( $$(date +%s) - $$start )) > tier1_runtime_s.txt && \
-	$(PY) -m benchmarks.run --quick --tier1-seconds tier1_runtime_s.txt
+	$(PY) -m benchmarks.run --quick --tier1-seconds tier1_runtime_s.txt && \
+	$(PY) benchmarks/check_observe_overhead.py

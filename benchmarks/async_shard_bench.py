@@ -104,7 +104,7 @@ def _workload():
 
 def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
          transport: str = "threads", cost: str = "sleep",
-         n_workers=None, faults=None):
+         n_workers=None, faults=None, observe: bool = False):
     """One sharded update; rate_per_shard (pushes/s, per shard) switches
     on the modeled drain clock via a scoped _drain_shard wrapper —
     `cost="sleep"` yields the GIL (dedicated-core model), `cost="burn"`
@@ -141,19 +141,28 @@ def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
             st, stats = update_ranks_sharded(dg, delta, st, p=p, tol=TOL,
                                              mode=mode, transport=transport,
                                              n_workers=n_workers,
-                                             faults=faults)
+                                             faults=faults, observe=observe)
         dt = time.perf_counter() - t0
     finally:
         sharded_mod._drain_shard = real_drain
-    return dict(mode=mode, p=p, transport=transport,
-                s=round(dt, 3), path=stats.path,
-                pushes=int(stats.pushes), supersteps=int(stats.supersteps),
-                exchanges=int(stats.exchanges),
-                bytes_moved=int(stats.bytes_moved),
-                cert=float(stats.cert), idle_s=round(float(stats.idle_s), 3),
-                attempts=int(stats.attempts),
-                recoveries=int(stats.recoveries),
-                recovery_s=round(float(stats.recovery_s), 4))
+    row = dict(mode=mode, p=p, transport=transport,
+               s=round(dt, 3), path=stats.path,
+               pushes=int(stats.pushes), supersteps=int(stats.supersteps),
+               exchanges=int(stats.exchanges),
+               bytes_moved=int(stats.bytes_moved),
+               cert=float(stats.cert), idle_s=round(float(stats.idle_s), 3),
+               attempts=int(stats.attempts),
+               recoveries=int(stats.recoveries),
+               recovery_s=round(float(stats.recovery_s), 4))
+    if observe:
+        # PR 7: attribution roll-up plus the full observed payload (the
+        # event stream) — the caller (observe_bench) pops `_observed`
+        # before serializing the row
+        row.update(pushes_first=int(stats.pushes_first),
+                   pushes_local=int(stats.pushes_local),
+                   pushes_boundary=int(stats.pushes_boundary))
+        row["_observed"] = stats.observed
+    return row
 
 
 def main():

@@ -1,0 +1,57 @@
+"""CI gate: observability must be pay-for-use (PR 7).
+
+    python benchmarks/check_observe_overhead.py [BENCH_PR7.json]
+
+Reads the ``observe.overhead`` section of the given perf-trajectory file
+(default BENCH_PR7.json at the repo root): the drain-dominated burn row
+(threads p=1) re-measured with observe=False must land within
+``limit`` (1.03x) of the same row in the pre-PR BENCH file.  The burn
+regime's wall-clock is dominated by the calibrated per-push spin, so
+the comparison is machine-independent — a regression here means the
+observe plumbing leaks cost into the observe=off hot path.
+
+Exit codes: 0 pass (or explicit skip when the baseline file predates
+the gate), 1 fail, 2 usage/missing section.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).parent.parent
+
+
+def main() -> int:
+    target = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        REPO_ROOT / "BENCH_PR7.json"
+    if not target.is_absolute():
+        target = REPO_ROOT / target
+    if not target.exists():
+        print(f"observe overhead gate: {target.name} not found")
+        return 2
+    rec = json.loads(target.read_text())
+    ov = rec.get("observe", {}).get("overhead")
+    if ov is None:
+        print(f"observe overhead gate: no observe.overhead section in "
+              f"{target.name}")
+        return 2
+    if ov.get("baseline_s") is None:
+        print(f"observe overhead gate: SKIP — {ov.get('note') or 'no pre-PR baseline available'}")
+        return 0
+    ratio = ov["off_vs_baseline"]
+    limit = ov.get("limit", 1.03)
+    verdict = "OK" if ratio <= limit else "FAIL"
+    print(f"observe=off burn: {ov['off_s']:.2f}s vs pre-PR "
+          f"{ov['baseline_s']:.2f}s [{ov['baseline']}] -> {ratio:.3f}x "
+          f"(limit {limit}x) {verdict}; on_vs_off={ov['on_vs_off']:.3f}x")
+    if ratio > limit:
+        print("observe=off regressed the drain-dominated hot path — the "
+              "off path must not pay for tracing (check for per-push "
+              "work gated on `obs is not None` that runs anyway)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

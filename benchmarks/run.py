@@ -5,9 +5,11 @@ beyond-paper studies. Prints ``name,us_per_call,derived`` CSV at the end.
 
 Every run (including --quick) starts with the matvec-backend bench, the
 streaming-update bench, the sharded-runtime bench (sparsified vs
-allgather) and the async-executor bench (async vs superstep shard
-drains, threads vs procpool transports) and writes the machine-readable
-perf-trajectory file (``--out``, default BENCH_PR6.json) at the repo
+allgather), the async-executor bench (async vs superstep shard
+drains, threads vs procpool transports) and the observability bench
+(push-inflation attribution, chaos trace demo, zero-cost-when-off
+gate) and writes the machine-readable
+perf-trajectory file (``--out``, default BENCH_PR7.json) at the repo
 root; ``--tier1-seconds`` embeds the measured suite runtime for the
 check_tier1_runtime.py gate; --quick then skips the slow DES paper-table
 and SPMD staleness studies.
@@ -29,7 +31,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR6.json",
+    ap.add_argument("--out", default="BENCH_PR7.json",
                     help="perf-trajectory output (BENCH_PR<N>.json for "
                          "PR N; relative paths land at the repo root)")
     ap.add_argument("--tier1-seconds", default=None,
@@ -130,6 +132,27 @@ def main() -> None:
         f"overhead_vs_no_faults={ck['overhead_vs_no_faults']:.2f}x,"
         f"cert={ck['cert']:.1e}"))
     brec["async_shard"] = arec
+
+    print("== Runtime observability (attribution, trace, overhead) ==")
+    from benchmarks import observe_bench
+    orec = observe_bench.main()
+    inf = orec["inflation"]["procpool"]
+    csv_rows.append((
+        "observe_attribution",
+        f"{inf['inflation']}",
+        f"pp_inflation={inf['inflation_ratio']:.2f}x,"
+        f"boundary_share={inf['boundary_share_of_inflation']},"
+        f"threads_boundary_share="
+        f"{orec['inflation']['threads']['boundary_share_of_inflation']},"
+        f"trace_events={orec['trace_demo']['events']}"))
+    ov = orec["overhead"]
+    csv_rows.append((
+        "observe_overhead",
+        f"{ov['off_s'] * 1e6:.0f}",
+        f"off_vs_baseline={ov['off_vs_baseline']},"
+        f"on_vs_off={ov['on_vs_off']:.3f}x,"
+        f"within_{ov['limit']}x={ov['within_limit']}"))
+    brec["observe"] = orec
     if tier1_seconds is not None:
         brec["tier1_seconds"] = tier1_seconds
     out_path.write_text(json.dumps(brec, indent=1))

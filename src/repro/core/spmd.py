@@ -55,7 +55,7 @@ bulk-synchronous rendering of Fig. 1.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -119,6 +119,12 @@ class SPMDResult:
     rows_sent: int = 0           # sparsified: sparse payload rows shipped
     lane_supersteps: Optional[np.ndarray] = None  # (nv,) first-done step
     lane_chunks: int = 1         # shard_map chunks run (compact_lanes)
+    # observe=True: one dict per shard_map chunk (lanes/steps/rows/fulls/
+    # bytes).  The in-loop counters restart at zero on every chunk's
+    # schedule re-keying, so the cumulative contract is
+    # comm_bytes_total == sum(c["bytes"]) and rows_sent == sum(c["rows"])
+    # across the log (pinned by tests/test_observe.py)
+    chunk_log: Optional[List[dict]] = None
 
 
 def _hash_uniform(seed: int, step: jax.Array, lane: jax.Array) -> jax.Array:
@@ -273,7 +279,8 @@ def col_map_seg(part: Partition, bsize: int, cols: np.ndarray) -> np.ndarray:
 
 def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
                mesh: Optional[Mesh] = None,
-               v: Optional[np.ndarray] = None) -> SPMDResult:
+               v: Optional[np.ndarray] = None,
+               observe: bool = False) -> SPMDResult:
     if cfg.compact_lanes and not cfg.freeze_lanes:
         raise ValueError("compact_lanes=True requires freeze_lanes=True "
                          "(compaction shrinks the stack to unfrozen lanes)")
@@ -484,11 +491,16 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
 
     compact = bool(cfg.compact_lanes and cfg.freeze_lanes and nv > 1)
     vblk_full = packed["vblk"]
+    chunk_log: Optional[List[dict]] = [] if observe else None
     if not compact:
         frag_mat, supersteps, resid_mat, lane_out, rows_total, fulls_total \
             = run_chunk(vblk_full, x0_blocks, cfg.max_supersteps, False)
         comm_total = chunk_bytes(nv, supersteps, rows_total, fulls_total)
         chunks = 1
+        if chunk_log is not None:
+            chunk_log.append(dict(chunk=0, lanes=nv, steps=supersteps,
+                                  rows=rows_total, fulls=fulls_total,
+                                  bytes=comm_total))
     else:
         # ---- pow2 lane compaction between shard_map chunks -------------
         # Run until >= half the active lanes are frozen, then shrink the
@@ -513,9 +525,18 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
             fr, st, rs, ls, rows_c, fulls_c = run_chunk(
                 cur_v, cur_x0, budget, True)
             steps_done += st
-            comm_total += chunk_bytes(len(active), st, rows_c, fulls_c)
+            cb = chunk_bytes(len(active), st, rows_c, fulls_c)
+            # the in-loop counters restarted at zero with this chunk's
+            # re-keyed schedule state, so the totals accumulate here —
+            # comm_bytes_total / rows_sent are cumulative across every
+            # chunk boundary (the chunk_log makes that checkable)
+            comm_total += cb
             rows_total += rows_c
             fulls_total += fulls_c
+            if chunk_log is not None:
+                chunk_log.append(dict(chunk=chunks - 1, lanes=len(active),
+                                      steps=st, rows=rows_c,
+                                      fulls=fulls_c, bytes=cb))
             done_pos = ls >= 0
             for pos, lane in enumerate(active):
                 if not real[pos]:
@@ -562,4 +583,4 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
                       comm_bytes_total=int(comm_total),
                       rows_sent=int(rows_total),
                       lane_supersteps=lane_out if nv > 1 else None,
-                      lane_chunks=chunks)
+                      lane_chunks=chunks, chunk_log=chunk_log)

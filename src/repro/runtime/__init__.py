@@ -35,6 +35,11 @@ three substrates that used to hand-roll it (`core.des`, `core.spmd`,
   supervisor — ShardSupervisor: self-healing for the procpool rendering —
              supervised worker restart with capped backoff, checkpoint
              restore, ledger reconciliation, conservative Fig. 1 re-entry.
+  observe  — ShardObserver: lock-cheap per-shard metrics registry,
+             ring-buffered event tracing at the cycle seams (Chrome
+             trace_event export), and push-inflation attribution — the
+             same arrays work in-process and as ShardArena views, and
+             everything is zero-cost when off (docs/observability.md).
 """
 from .state import (ArenaHandle, ShardArena, ShardState,
                     sweep_stale_segments)
@@ -44,6 +49,9 @@ from .exchange import (ExchangePlan, AllToAllPlan, RingPlan, AdaptivePlan,
 from .driver import TerminationDriver
 from .faults import (FaultPlan, FaultState, FaultyContext,
                      InjectedWorkerKill)
+from .observe import (EV_NAMES, OBS_COUNTERS, ShardObserver,
+                      attribute_frontier, chrome_trace, render_prometheus,
+                      write_chrome_trace)
 from .supervisor import BackoffPolicy, RestartEvent, ShardSupervisor
 from .transport import (Channel, HostAllReduce, ProcPoolShardExecutor,
                         ReductionChannel, ShmRing, ThreadedShardTransport,
@@ -60,6 +68,8 @@ __all__ = [
     "TerminationDriver",
     "FaultPlan", "FaultState", "FaultyContext", "InjectedWorkerKill",
     "BackoffPolicy", "RestartEvent", "ShardSupervisor",
+    "ShardObserver", "EV_NAMES", "OBS_COUNTERS", "attribute_frontier",
+    "chrome_trace", "write_chrome_trace", "render_prometheus",
     "Channel", "TransportContext", "WorkerConfig", "shard_worker_loop",
     "ThreadedShardTransport", "ProcPoolShardExecutor", "ShmRing",
     "default_pool_size", "ReductionChannel", "HostAllReduce", "mesh_psum",

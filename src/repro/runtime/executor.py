@@ -66,6 +66,7 @@ from ..core.partition import Partition
 from .driver import TerminationDriver
 from .exchange import ExchangePlan
 from .faults import FaultPlan, FaultState
+from .observe import ShardObserver
 from .transport import (AsyncRunResult, DrainFn, PairMailbox,  # noqa: F401
                         ThreadedShardTransport, UniformAccumulator,
                         WorkerConfig)
@@ -91,7 +92,8 @@ class AsyncShardExecutor:
                  hysteresis: float = 2.0,
                  faults: Optional[FaultPlan] = None,
                  fault_state: Optional[FaultState] = None,
-                 max_restarts: Optional[int] = None):
+                 max_restarts: Optional[int] = None,
+                 observe: Optional[ShardObserver] = None):
         if driver.p != part.p or plan.p != part.p:
             raise ValueError(f"partition ({part.p}), plan ({plan.p}) and "
                              f"driver ({driver.p}) disagree on p")
@@ -110,6 +112,9 @@ class AsyncShardExecutor:
             else None
         self.fault_state = fault_state
         self.max_restarts = max_restarts
+        # an armed ShardObserver (runtime/observe.py) traces the run;
+        # None keeps the zero-cost default
+        self.observe = observe
 
     def run(self, drain_fn: DrainFn, r: np.ndarray) -> AsyncRunResult:
         """Drive the drains until STOP or a cap; on return every mailbox,
@@ -130,5 +135,5 @@ class AsyncShardExecutor:
                 drain_frac=float(self.drain_frac),
                 hysteresis=float(self.hysteresis)),
             faults=self.faults, fault_state=self.fault_state,
-            max_restarts=self.max_restarts)
+            max_restarts=self.max_restarts, observe=self.observe)
         return transport.run(drain_fn, r)

@@ -55,9 +55,11 @@ import dataclasses
 import os
 import signal
 import time
-from typing import Dict, Mapping, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
+
+from .observe import C_HANGS, C_KILLS, EV_HANG, EV_KILL, ShardObserver
 
 
 class InjectedWorkerKill(Exception):
@@ -142,7 +144,7 @@ class FaultyContext:
     worker touches only its own (i, *) fault state)."""
 
     def __init__(self, inner, plan: FaultPlan, part, fired: np.ndarray,
-                 kill_mode: str):
+                 kill_mode: str, obs: Optional[ShardObserver] = None):
         if kill_mode not in ("process", "thread"):
             raise ValueError(f"unknown kill_mode {kill_mode!r}")
         self.inner = inner
@@ -150,6 +152,7 @@ class FaultyContext:
         self.part = part
         self.fired = fired              # (2, p), shared across restarts
         self.kill_mode = kill_mode
+        self._obs = obs                 # KILL/HANG instants when tracing
         p = part.p
         self._rng: Dict[Tuple[int, int], np.random.Generator] = {}
         self._held: Dict[Tuple[int, int], np.ndarray] = {}
@@ -211,6 +214,11 @@ class FaultyContext:
         self._round[i] = it
         ka = self.plan.kill.get(i)
         if ka is not None and it >= ka and not self.fired[0, i]:
+            if self._obs is not None:
+                # the event must be in the (shared) ring before the
+                # process SIGKILLs itself — it survives the incarnation
+                self._obs.ctr[i, C_KILLS] += 1
+                self._obs.emit(EV_KILL, i, self._obs.now(), a=float(it))
             self.fired[0, i] = 1    # shared store lands before the kill
             if self.kill_mode == "process":
                 os.kill(os.getpid(), signal.SIGKILL)
@@ -218,6 +226,9 @@ class FaultyContext:
         ha = self.plan.hang.get(i)
         if ha is not None and it >= ha[0] and not self.fired[1, i]:
             self.fired[1, i] = 1
+            if self._obs is not None:
+                self._obs.ctr[i, C_HANGS] += 1
+                self._obs.emit(EV_HANG, i, self._obs.now(), a=float(ha[1]))
             time.sleep(float(ha[1]))
         self._flush_due(i, it)
         return self.inner.report(i, verdict, it)

@@ -51,6 +51,7 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from ..core.termination import Msg
+from .observe import C_RECOVERIES, EV_RECOVERY, ShardObserver
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +91,8 @@ class ShardSupervisor:
     def __init__(self, part, driver, ctl, r: np.ndarray,
                  x: Optional[np.ndarray], assign: List[List[int]],
                  spawn: Callable, *, max_restarts: int,
-                 backoff: BackoffPolicy = BackoffPolicy()):
+                 backoff: BackoffPolicy = BackoffPolicy(),
+                 obs: Optional[ShardObserver] = None):
         self.part = part
         self.driver = driver
         self.ctl = ctl
@@ -100,6 +102,7 @@ class ShardSupervisor:
         self.spawn = spawn
         self.max_restarts = int(max_restarts)
         self.backoff = backoff
+        self.obs = obs          # RECOVERY events + counters when tracing
         self.recoveries = 0
         self.recovery_s = 0.0
         self.events: List[RestartEvent] = []
@@ -240,6 +243,17 @@ class ShardSupervisor:
                 self._per_worker_restarts[w] += 1
                 restored = tuple(i for i in self.assign[w]
                                  if self._recover_shard(i))
+                if self.obs is not None:
+                    # written between death detection and respawn: no
+                    # worker incarnation is alive, so the parent is the
+                    # shard ring's only writer right now
+                    for i in self.assign[w]:
+                        self.obs.ctr[i, C_RECOVERIES] += 1
+                        self.obs.emit(
+                            EV_RECOVERY, i, t0,
+                            dur=time.perf_counter() - t0, a=float(w),
+                            b=float(ec if ec is not None else 0),
+                            c=float(i in restored))
                 time.sleep(self.backoff.delay(k))
                 repl = self.spawn(w)
                 self.all_procs.append(repl)

@@ -69,6 +69,13 @@ from ..core.partition import Partition
 from ..core.termination import ComputingUEState, Msg
 from .exchange import ExchangePlan
 from .faults import FaultPlan, FaultState, FaultyContext, InjectedWorkerKill
+from .observe import (C_CAPPED, C_CONVERGES, C_DIVERGES, C_DRAIN_MASS,
+                      C_DRAIN_ROWS, C_DRAINS, C_EXCHANGE_BYTES,
+                      C_EXCHANGE_ROWS, C_EXCHANGES, C_INTAKES, C_RECOVERIES,
+                      C_STOPS, C_UNIFORM_FOLDS, DEFAULT_EVENT_CAP, EV_CAPPED,
+                      EV_CONVERGE, EV_DIVERGE, EV_DRAIN, EV_EXCHANGE,
+                      EV_INTAKE, EV_RECOVERY, EV_STOP, ShardObserver,
+                      obs_ctl_entries)
 from .state import ArenaHandle, ShardArena
 from .supervisor import BackoffPolicy, ShardSupervisor
 
@@ -139,15 +146,21 @@ class PairMailbox:
             self.buf += block
             self._l1 = float(np.abs(self.buf).sum())
 
-    def drain_into(self, r: np.ndarray, s: int, e: int) -> float:
+    def drain_into(self, r: np.ndarray, s: int, e: int,
+                   mark: Optional[np.ndarray] = None) -> float:
         """Fold the buffer into r[s:e] (the owner's rows); returns the L1
-        mass moved (0.0 on the lock-free empty fast path)."""
+        mass moved (0.0 on the lock-free empty fast path).  When `mark`
+        (a full-length uint8 row-flag array) is given, rows that received
+        foreign mass are flagged — the push-inflation attribution's
+        "boundary re-activation" marker (runtime/observe.py)."""
         if self._l1 == 0.0:
             return 0.0
         with self.lock:
             moved = self._l1
             if moved != 0.0:
                 r[s:e] += self.buf
+                if mark is not None:
+                    mark[s:e][self.buf != 0.0] = 1
                 self.buf[:] = 0.0
                 self._l1 = 0.0
         return moved
@@ -249,13 +262,17 @@ class ShmRing:
         self.tail[0] = t + 1        # publish AFTER the data is in place
         return True
 
-    def pop_into(self, out: np.ndarray) -> float:
+    def pop_into(self, out: np.ndarray,
+                 mark: Optional[np.ndarray] = None) -> float:
         """Fold every pending record into `out` (the owner's block view);
         returns the |payload| L1 folded.  Sequence-numbered records are
         folded at most once (duplicates and crash-replays are skipped);
         `last_seq` advances *before* the fold, so a consumer killed
         mid-fold can at worst lose one record (a bounded under-count the
-        caller's exact recompute covers) but never double-fold."""
+        caller's exact recompute covers) but never double-fold.  `mark`
+        (a block-shaped uint8 flag view) tags every row that received
+        foreign mass — the push-inflation attribution's boundary
+        re-activation marker (runtime/observe.py)."""
         moved = 0.0
         h, t = int(self.head[0]), int(self.tail[0])
         dedupe = self.seq is not None
@@ -272,6 +289,8 @@ class ShmRing:
             ix = self.idx[slot, :k]
             v = self.val[slot, :k]
             out[ix] += v            # rows within one record are unique
+            if mark is not None:
+                mark[ix] = 1
             moved += float(np.abs(v).sum())
             h += 1
             self.head[0] = h        # free the slot before the next read
@@ -318,6 +337,9 @@ class AsyncRunResult:
     wall_s: float
     recoveries: int = 0             # supervised worker restarts
     recovery_s: float = 0.0         # total death-detection -> respawned
+    observed: Optional[dict] = None  # ShardObserver.observed() payload
+    # (events + counters + attribution) when the run was traced; None
+    # when observability was off (the zero-cost default)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -402,7 +424,8 @@ class TransportContext(Protocol):
 # ---------------------------------------------------------------------------
 def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
                       plan: ExchangePlan, cfg: WorkerConfig,
-                      ctx: TransportContext, drain_fn: DrainFn) -> None:
+                      ctx: TransportContext, drain_fn: DrainFn,
+                      obs: Optional[ShardObserver] = None) -> None:
     """One round = one intake + (gated) local update + one Fig. 1
     checkConvergence().  The ExchangePlan runs on its own clock of *local
     updates*: drain rounds tick it, idle-converged spin rounds do not (a
@@ -415,6 +438,12 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
     indefinitely: it is counted in their reported value, so the
     certificate stays sound.  (Transplanted verbatim from the PR 4
     executor; tests/test_executor.py golden-gates the thread rendering.)
+
+    `obs` arms the observability layer (runtime/observe.py): structured
+    events at every cycle seam (intake / drain / exchange / Fig. 1
+    verdict flips / STOP / caps) plus the per-shard counter slots.  The
+    default None is the zero-cost path — every hook is one predictable
+    branch.
     """
     p = part.p
     s, e = part.block(i)
@@ -437,9 +466,24 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
     updates = 0       # *local updates*: the ExchangePlan's clock
     tick_pending = False
     idle_total = 0.0
+    prev_verdict: Optional[bool] = None   # Fig. 1 flip edge detector
     try:
-        while not ctx.stopped():
+        while True:
+            if ctx.stopped():
+                # the other clean exit: a peer's report chain stamped the
+                # global STOP and this shard observed it at the loop top —
+                # trace it so every shard's stream ends in exactly one
+                # STOP (the report()-True path below emits its own)
+                if obs is not None:
+                    obs.ctr[i, C_STOPS] += 1
+                    obs.emit(EV_STOP, i, obs.now(), gen=updates,
+                             a=float(it))
+                break
             if it >= cfg.max_rounds:
+                if obs is not None:
+                    obs.ctr[i, C_CAPPED] += 1
+                    obs.emit(EV_CAPPED, i, obs.now(), gen=updates,
+                             a=float(it))
                 ctx.note_capped()
                 break
             it += 1
@@ -454,10 +498,15 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
             #    flag while a whole exchange generation sits uncounted in
             #    its rows. ----------------------------------------------
             if ctx.intake_ready(i):
+                t_ev = obs.now() if obs is not None else 0.0
                 ctx.retract(i)
                 if ctx.fold_intake(i, r, s, e):
                     progressed = True
                     own_dirty = True
+                if obs is not None:
+                    obs.ctr[i, C_INTAKES] += 1
+                    obs.emit(EV_INTAKE, i, t_ev, dur=obs.now() - t_ev,
+                             gen=updates, a=float(progressed))
 
             # -- local update: drain own rows to a sliding target.  The
             #    drain is gated by a hysteresis band: entering the
@@ -477,7 +526,26 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
             did_drain = False
             if own_l1 > (cfg.hysteresis * step_target
                          if step_target > drain_floor else drain_floor):
-                got, c_add = drain_fn(i, s, e, step_target, outbox)
+                if obs is None:
+                    got, c_add = drain_fn(i, s, e, step_target, outbox)
+                else:
+                    t_ev = obs.now()
+                    a0 = (obs.attr[i].copy()
+                          if obs.attr is not None else None)
+                    got, c_add = drain_fn(i, s, e, step_target, outbox)
+                    dt_ev = obs.now() - t_ev
+                    da_local = da_boundary = 0.0
+                    if a0 is not None:
+                        da = obs.attr[i] - a0
+                        da_local, da_boundary = float(da[1]), float(da[2])
+                    obs.ctr[i, C_DRAINS] += 1
+                    obs.ctr[i, C_DRAIN_ROWS] += got
+                    obs.ctr[i, C_DRAIN_MASS] += max(own_l1 - step_target,
+                                                    0.0)
+                    obs.observe_drain_s(i, dt_ev)
+                    obs.emit(EV_DRAIN, i, t_ev, dur=dt_ev, gen=updates,
+                             a=float(got), b=own_l1, c=da_local,
+                             d=da_boundary)
                 ctx.uniform_add(i, c_add)
                 own_dirty = outbox_dirty = True
                 did_drain = True
@@ -486,6 +554,10 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
                     progressed = True
             if (cfg.max_total_pushes is not None
                     and ctx.total_pushes() > cfg.max_total_pushes):
+                if obs is not None:
+                    obs.ctr[i, C_CAPPED] += 1
+                    obs.emit(EV_CAPPED, i, obs.now(), gen=updates,
+                             a=float(it))
                 ctx.note_capped()
                 break
 
@@ -520,6 +592,7 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
                         continue
                     if not plan.gate_mass(i, d, updates, mass):
                         continue
+                    t_ev = obs.now() if obs is not None else 0.0
                     nz = ctx.send(i, d, box)
                     if nz < 0:
                         # channel backpressure (a full procpool ring):
@@ -527,6 +600,14 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
                         # this shard's value — and ships on a later
                         # update
                         continue
+                    if obs is not None:
+                        nbytes = nz * (4 + cfg.bytes_per_entry)
+                        obs.ctr[i, C_EXCHANGES] += 1
+                        obs.ctr[i, C_EXCHANGE_ROWS] += nz
+                        obs.ctr[i, C_EXCHANGE_BYTES] += nbytes
+                        obs.emit(EV_EXCHANGE, i, t_ev,
+                                 dur=obs.now() - t_ev, gen=updates,
+                                 a=float(d), b=float(nz), c=float(nbytes))
                     outbox_dirty = True
                     plan.note_sent(i, d, updates)
                     plan.on_result(i, d, True)
@@ -556,7 +637,21 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
 
             # -- Fig. 1, message rendering ------------------------------
             verdict = value <= conv_target
+            if obs is not None and verdict != prev_verdict:
+                if verdict:
+                    obs.ctr[i, C_CONVERGES] += 1
+                    obs.emit(EV_CONVERGE, i, obs.now(), gen=updates,
+                             a=value)
+                else:
+                    obs.ctr[i, C_DIVERGES] += 1
+                    obs.emit(EV_DIVERGE, i, obs.now(), gen=updates,
+                             a=value)
+                prev_verdict = verdict
             if ctx.report(i, verdict, it):
+                if obs is not None:
+                    obs.ctr[i, C_STOPS] += 1
+                    obs.emit(EV_STOP, i, obs.now(), gen=updates,
+                             a=float(it))
                 break
             if not verdict and not progressed:
                 # parked above target with the plan withholding: count
@@ -582,11 +677,13 @@ class ThreadContext:
     behavior-identical to the PR 4 executor internals."""
 
     def __init__(self, part: Partition, driver: TerminationDriver,
-                 cfg: WorkerConfig):
+                 cfg: WorkerConfig,
+                 obs: Optional[ShardObserver] = None):
         p = part.p
         self.part = part
         self.driver = driver
         self.cfg = cfg
+        self._obs = obs
         self.mail = [[PairMailbox(part.block(d)[1] - part.block(d)[0])
                       if d != i else None for d in range(p)]
                      for i in range(p)]
@@ -633,12 +730,17 @@ class ThreadContext:
 
     def fold_intake(self, i: int, r: np.ndarray, s: int, e: int) -> bool:
         progressed = False
+        obs = self._obs
+        mark = obs.foreign if (obs is not None
+                               and obs.foreign is not None) else None
         for mb in self._inboxes[i]:
-            if mb.drain_into(r, s, e) != 0.0:
+            if mb.drain_into(r, s, e, mark=mark) != 0.0:
                 progressed = True
         dc = self.uniform.take(i)
         if dc != 0.0:
             r[s:e] += dc
+            if obs is not None:
+                obs.ctr[i, C_UNIFORM_FOLDS] += 1
             progressed = True
         return progressed
 
@@ -711,7 +813,8 @@ class ThreadedShardTransport:
                  faults: Optional[FaultPlan] = None,
                  fault_state: Optional[FaultState] = None,
                  max_restarts: Optional[int] = None,
-                 restart_backoff: BackoffPolicy = BackoffPolicy()):
+                 restart_backoff: BackoffPolicy = BackoffPolicy(),
+                 observe: Optional[ShardObserver] = None):
         if driver.p != part.p or plan.p != part.p:
             raise ValueError(f"partition ({part.p}), plan ({plan.p}) and "
                              f"driver ({driver.p}) disagree on p")
@@ -724,6 +827,7 @@ class ThreadedShardTransport:
         self.max_restarts = (2 * part.p if max_restarts is None
                              else int(max_restarts))
         self.restart_backoff = restart_backoff
+        self.observe = observe
 
     def run(self, drain_fn: DrainFn, r: np.ndarray) -> AsyncRunResult:
         """Drive the drains until STOP or a cap; on return every mailbox,
@@ -738,14 +842,16 @@ class ThreadedShardTransport:
         contract."""
         p, part = self.part.p, self.part
         t0 = time.perf_counter()
-        ctx = ThreadContext(part, self.driver, self.cfg)
+        obs = self.observe
+        ctx = ThreadContext(part, self.driver, self.cfg, obs=obs)
         ctx.last_values[:] = [float(np.abs(r[s:e]).sum())
                               for s, e in (part.block(i) for i in range(p))]
         wctx: TransportContext = ctx
         if self.faults is not None:
             fstate = self.fault_state or self.faults.state(p)
             wctx = FaultyContext(ctx, self.faults, part,
-                                 fired=fstate.fired, kill_mode="thread")
+                                 fired=fstate.fired, kill_mode="thread",
+                                 obs=obs)
         errors: List[Optional[BaseException]] = [None] * p
         budget = [self.max_restarts]
         recovery = dict(n=0, s=0.0)
@@ -755,7 +861,7 @@ class ThreadedShardTransport:
             while True:
                 try:
                     shard_worker_loop(i, r, part, self.plan, self.cfg,
-                                      wctx, drain_fn)
+                                      wctx, drain_fn, obs=obs)
                     return
                 except InjectedWorkerKill:
                     with ctx.stat_lock:
@@ -777,8 +883,15 @@ class ThreadedShardTransport:
                             self.driver.restart_shard(i)
                     time.sleep(self.restart_backoff.delay(attempt))
                     attempt += 1
+                    dt_rec = time.perf_counter() - t_rec
                     with ctx.stat_lock:
-                        recovery["s"] += time.perf_counter() - t_rec
+                        recovery["s"] += dt_rec
+                    if obs is not None:
+                        # shard i's own (restarting) worker writes its own
+                        # ring — the single-writer invariant holds
+                        obs.ctr[i, C_RECOVERIES] += 1
+                        obs.emit(EV_RECOVERY, i, t_rec, dur=dt_rec,
+                                 a=float(i))
                 except BaseException as exc:  # pragma: no cover - reraised
                     errors[i] = exc
                     ctx.stop_evt.set()
@@ -820,7 +933,8 @@ class ThreadedShardTransport:
             stop_round=ctx.shared["stop_round"],
             idle_s_per_shard=ctx.idle_s,
             wall_s=time.perf_counter() - t0,
-            recoveries=recovery["n"], recovery_s=recovery["s"])
+            recoveries=recovery["n"], recovery_s=recovery["s"],
+            observed=obs.observed() if obs is not None else None)
 
 
 # ---------------------------------------------------------------------------
@@ -833,7 +947,8 @@ _MSG_RING_DEPTH = 256
 
 
 def _ctl_spec(p: int, n: int, part: Partition, ring_depth: int,
-              payload_cap: int) -> Dict:
+              payload_cap: int, observe: bool = False,
+              obs_event_cap: int = DEFAULT_EVENT_CAP) -> Dict:
     """Layout of the transport control block: flags, per-shard telemetry,
     the uniform scalar ledger, the in-flight L1 ledgers, the outboxes and
     both ring families (mail payloads, Fig. 1 messages).
@@ -843,9 +958,17 @@ def _ctl_spec(p: int, n: int, part: Partition, ring_depth: int,
     — so the reservation scales O(p^2 * depth * payload_cap), not
     O(p * depth * n): a dense-block slot layout would reserve hundreds of
     MB of /dev/shm at p=8, n~1e6 and SIGBUS a worker in containers with
-    the Docker-default 64 MB tmpfs."""
+    the Docker-default 64 MB tmpfs.
+
+    `observe=True` appends the observability slots (event rings, counter
+    registry, attribution flags — runtime/observe.py): putting them in
+    the control segment is what makes worker-side metrics survive the
+    process boundary and supervisor respawns without locks (the segment
+    outlives every worker incarnation, and every slot is single-writer).
+    They are only *allocated* when observing — /dev/shm stays small on
+    the default path."""
     cap = min(int(part.sizes().max()), int(payload_cap))
-    return {
+    spec = {
         "flags": ((3,), np.int64),          # stop / capped / stop_round
         "err": ((p,), np.int64),
         "values": ((p,), np.float64),
@@ -882,6 +1005,9 @@ def _ctl_spec(p: int, n: int, part: Partition, ring_depth: int,
         "ckpt_x": ((n,), np.float64),       # per-shard iterate checkpoint
         "restarts": ((p,), np.int64),       # writer = parent supervisor
     }
+    if observe:
+        spec.update(obs_ctl_entries(p, n, event_cap=obs_event_cap))
+    return spec
 
 
 def _ctl_ring(ctl: ShardArena, i: int, d: int) -> ShmRing:
@@ -906,13 +1032,15 @@ class ProcContext:
     def __init__(self, ctl: ShardArena, part: Partition, cfg: WorkerConfig,
                  pc_max_compute: int, r: Optional[np.ndarray] = None,
                  x: Optional[np.ndarray] = None,
-                 checkpoint_every: int = 0):
+                 checkpoint_every: int = 0,
+                 obs: Optional[ShardObserver] = None):
         self.ctl = ctl
         self.part = part
         self.cfg = cfg
         self._r = r
         self._x = x
         self._ckpt_every = int(checkpoint_every)
+        self._obs = obs
         p = part.p
         self._ues = {i: ComputingUEState(pc_max=pc_max_compute)
                      for i in range(p)}
@@ -948,10 +1076,13 @@ class ProcContext:
     def fold_intake(self, i: int, r: np.ndarray, s: int, e: int) -> bool:
         progressed = False
         own = r[s:e]
+        obs = self._obs
+        mark = (obs.foreign[s:e] if obs is not None
+                and obs.foreign is not None else None)
         for j in range(self.part.p):
             if j == i:
                 continue
-            moved = self._mail[(j, i)].pop_into(own)
+            moved = self._mail[(j, i)].pop_into(own, mark=mark)
             if moved != 0.0:
                 # the fold leaves the sender's books only now: recv_abs
                 # is bumped AFTER the rows it covers are counted in our
@@ -963,6 +1094,8 @@ class ProcContext:
         if dc != 0.0:
             r[s:e] += dc
             self.ctl["uni_seen"][i] = total
+            if obs is not None:
+                obs.ctr[i, C_UNIFORM_FOLDS] += 1
             progressed = True
         return progressed
 
@@ -1086,7 +1219,8 @@ def _procpool_worker_main(shard_ids, data_handle: ArenaHandle,
                           pc_max_compute: int, r_key: str,
                           x_key: Optional[str] = None,
                           faults: Optional[FaultPlan] = None,
-                          checkpoint_every: int = 0) -> None:
+                          checkpoint_every: int = 0,
+                          observe: bool = False) -> None:
     """Worker-process entry: attach both arenas, rebuild the drain from
     the factory, and run one `shard_worker_loop` per owned shard (several
     shards share a process when p exceeds the pool — they interleave on
@@ -1107,13 +1241,19 @@ def _procpool_worker_main(shard_ids, data_handle: ArenaHandle,
         r = views[r_key]
         x = views.get(x_key) if x_key else None
         drain_fn = drain_factory(views)
+        # the worker-side observer wraps the control arena's obs_* views:
+        # counters and events land in shared memory, so they survive this
+        # process being SIGKILL'd and respawned
+        obs = ShardObserver.from_views(ctl) if observe else None
+        if obs is not None and hasattr(drain_fn, "set_observer"):
+            drain_fn.set_observer(obs)   # arm push-inflation attribution
         ctx: TransportContext = ProcContext(
             ctl, part, cfg, pc_max_compute, r=r, x=x,
-            checkpoint_every=checkpoint_every)
+            checkpoint_every=checkpoint_every, obs=obs)
         if faults is not None:
             ctx = FaultyContext(ctx, faults, part,
                                 fired=ctl["fault_fired"],
-                                kill_mode="process")
+                                kill_mode="process", obs=obs)
         busy = ctl["busy"]
 
         def guarded(i, s, e, t, outbox):
@@ -1129,7 +1269,8 @@ def _procpool_worker_main(shard_ids, data_handle: ArenaHandle,
 
         def run_one(i: int) -> None:
             try:
-                shard_worker_loop(i, r, part, plan, cfg, ctx, guarded)
+                shard_worker_loop(i, r, part, plan, cfg, ctx, guarded,
+                                  obs=obs)
             except BaseException:
                 traceback.print_exc()
                 ctl["err"][i] += 1
@@ -1220,7 +1361,9 @@ class ProcPoolShardExecutor:
                  fault_state: Optional[FaultState] = None,
                  max_restarts: Optional[int] = None,
                  restart_backoff: BackoffPolicy = BackoffPolicy(),
-                 checkpoint_every: int = 32):
+                 checkpoint_every: int = 32,
+                 observe: bool = False,
+                 observe_event_cap: int = DEFAULT_EVENT_CAP):
         if driver.p != part.p or plan.p != part.p:
             raise ValueError(f"partition ({part.p}), plan ({plan.p}) and "
                              f"driver ({driver.p}) disagree on p")
@@ -1256,6 +1399,8 @@ class ProcPoolShardExecutor:
                              else int(max_restarts))
         self.restart_backoff = restart_backoff
         self.checkpoint_every = int(checkpoint_every)
+        self.observe = bool(observe)
+        self.observe_event_cap = int(observe_event_cap)
 
     # ------------------------------------------------------------------
     def run(self, drain_factory: DrainFactory, data: ShardArena,
@@ -1279,7 +1424,10 @@ class ProcPoolShardExecutor:
             "fork" if "fork" in mp.get_all_start_methods() else "spawn")
         mpctx = mp.get_context(method)
         ctl = ShardArena.create(_ctl_spec(p, part.n, part, self.ring_depth,
-                                          self.ring_payload_cap),
+                                          self.ring_payload_cap,
+                                          observe=self.observe,
+                                          obs_event_cap=(
+                                              self.observe_event_cap)),
                                 prefix="repro_arena_ctl")
         sup: Optional[ShardSupervisor] = None
         procs: List = []
@@ -1311,7 +1459,8 @@ class ProcPoolShardExecutor:
                     args=(assign[w], data.handle(), ctl.handle(), part,
                           self.plan, self.cfg, drain_factory,
                           self.driver.pc_max_compute, r_key, x_key,
-                          self.faults, self.checkpoint_every),
+                          self.faults, self.checkpoint_every,
+                          self.observe),
                     name=f"shard-worker-{w}", daemon=True)
                 with warnings.catch_warnings():
                     # jax's at-fork hook warns that the parent is
@@ -1326,10 +1475,17 @@ class ProcPoolShardExecutor:
                     pr.start()
                 return pr
 
+            # the parent-side observer reads/writes the same arena slots:
+            # supervisor recoveries land in the dead shard's ring while no
+            # worker incarnation is alive (single-writer preserved), and
+            # the final observed payload is read out before the arena is
+            # unlinked
+            pobs = (ShardObserver.from_views(ctl) if self.observe
+                    else None)
             sup = ShardSupervisor(
                 part, self.driver, ctl, r, x, assign, spawn,
                 max_restarts=self.max_restarts,
-                backoff=self.restart_backoff)
+                backoff=self.restart_backoff, obs=pobs)
             procs = [spawn(w) for w in range(len(assign))]
             died = sup.supervise(procs)
             for pr in sup.all_procs:
@@ -1384,7 +1540,8 @@ class ProcPoolShardExecutor:
                 idle_s_per_shard=ctl["idle_s"].copy(),
                 wall_s=time.perf_counter() - t0,
                 recoveries=sup.recoveries,
-                recovery_s=sup.recovery_s)
+                recovery_s=sup.recovery_s,
+                observed=pobs.observed() if pobs is not None else None)
         finally:
             for pr in (sup.all_procs if sup is not None and sup.all_procs
                        else procs):

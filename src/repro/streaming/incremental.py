@@ -72,6 +72,11 @@ class UpdateStats:
     resid_l1: float           # ||r||_1 on return
     cert: float               # resid_l1 / (1 - alpha)
     solver_iters: int = 0     # fallback iterations (0 on the push path)
+    # single-updater push decomposition (mirrors the sharded updater's
+    # first/local/boundary attribution; with one shard there is no
+    # boundary, so pops split into first visits and sweep re-pushes)
+    pushes_first: int = 0     # distinct rows popped (== nodes_visited)
+    pushes_repeat: int = 0    # re-pushes from the sweep order
 
 
 def _exact_residual(dg: DeltaGraph, x: np.ndarray, alpha: float,
@@ -512,7 +517,8 @@ def update_ranks(dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
                 return state, UpdateStats(
                     path="push", pushes=pushes, nodes_visited=visited,
                     frontier_peak=peak, seed_l1=seed_l1, resid_l1=resid,
-                    cert=resid / (1.0 - alpha))
+                    cert=resid / (1.0 - alpha), pushes_first=visited,
+                    pushes_repeat=pushes - visited)
         elif c != 0.0:
             r += c      # partial push aborted: fold c back before fallback
     else:
@@ -569,4 +575,5 @@ def ppr_push(view, seeds, weights=None, alpha: float = 0.85,
         cert = float("inf")
     return x, cert, UpdateStats(
         path="push", pushes=pushes, nodes_visited=visited,
-        frontier_peak=peak, seed_l1=1.0 - alpha, resid_l1=resid, cert=cert)
+        frontier_peak=peak, seed_l1=1.0 - alpha, resid_l1=resid, cert=cert,
+        pushes_first=visited, pushes_repeat=pushes - visited)

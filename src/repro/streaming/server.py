@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..runtime.observe import render_prometheus
 from .delta import DeltaGraph, EdgeDelta, FrozenGraphView, merge_deltas
 from .incremental import (RankState, UpdateStats, _exact_residual,
                           cold_state, ppr_push, refresh_residual,
@@ -144,6 +145,8 @@ class RankServer:
         self.batches_applied = 0
         self.fallbacks = 0
         self.queries_served = 0
+        self.state_recoveries = 0   # _recover_state entries (any path)
+        self.cold_rebuilds = 0      # ...that took the cold_state resort
         self.last_stats = None   # UpdateStats | ShardedUpdateStats
 
         # degrade-gracefully state (PR 6): a daemon-updater failure no
@@ -306,6 +309,7 @@ class RankServer:
         with self._lock:
             st = self._state
             n = self.dg.n
+            cold = False
             try:
                 if st.v is not None and (st.x.shape[0] != n
                                          or st.version != self.dg.version):
@@ -325,10 +329,26 @@ class RankServer:
                     # maintained residual is suspect — re-derive it
                     refresh_residual(self.dg, st)
             except Exception:
+                cold = True
                 self._state = cold_state(
                     self.dg, alpha=self.alpha, tol=self.tol,
                     backend=self.backend, method=self.method)
             self._batches_since_refresh = 0
+            self._note_state_recovery(cold)
+
+    def _note_state_recovery(self, cold: bool) -> None:
+        """The one place recovery telemetry reconciles, under
+        `_stat_lock`.  The cold-fallback path used to move *no* counters:
+        a cold rebuild re-certifies through a full solver pass — a
+        fallback in every sense `fallbacks` counts — yet the counter (and
+        any recovery signal) stayed stale across it, so `metrics()`
+        readers saw an "all pushes" server that had in fact been rebuilt
+        from scratch."""
+        with self._stat_lock:
+            self.state_recoveries += 1
+            if cold:
+                self.cold_rebuilds += 1
+                self.fallbacks += 1
 
     def health(self) -> Dict[str, object]:
         """Liveness + degradation signal for operators/load-balancers.
@@ -357,6 +377,51 @@ class RankServer:
             snapshot_cert=float(snap.cert),
             version_lag=int(max(self.dg.version - snap.version, 0)),
             pending_deltas=int(self._queue.qsize()))
+
+    def metrics(self) -> Dict[str, object]:
+        """One reconciled snapshot of every counter the server keeps,
+        plus the serving-freshness gauges (staleness, certificate bound,
+        snapshot seq, updater restarts) — the machine-readable companion
+        of `health()` and the source for `metrics_text()`.  Counters are
+        read together under `_stat_lock`, so a concurrent updater can
+        never yield a snapshot where e.g. `cold_rebuilds` moved but
+        `fallbacks` did not (the satellite-1 staleness)."""
+        stale = self.staleness()
+        snap = self._snapshot
+        started = self._thread is not None
+        alive = bool(started and self._thread.is_alive())
+        with self._stat_lock:
+            m: Dict[str, object] = dict(
+                deltas_ingested=int(self.deltas_ingested),
+                batches_applied=int(self.batches_applied),
+                fallbacks=int(self.fallbacks),
+                queries_served=int(self.queries_served),
+                state_recoveries=int(self.state_recoveries),
+                cold_rebuilds=int(self.cold_rebuilds),
+                consecutive_failures=int(self.consecutive_failures),
+                updater_restarts=int(self.updater_restarts),
+            )
+        m.update(
+            updater_started=started, updater_alive=alive,
+            snapshot_seq=int(snap.seq), snapshot_cert=float(snap.cert),
+            version_lag=int(stale["version_lag"]),
+            pending_deltas=int(stale["pending_deltas"]),
+            snapshot_age_s=float(stale["age_s"]))
+        return m
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of `metrics()` (rendered by
+        `runtime.observe.render_prometheus`; scrape-ready)."""
+        m = self.metrics()
+        fams = [(k, "counter", m[k]) for k in (
+            "deltas_ingested", "batches_applied", "fallbacks",
+            "queries_served", "state_recoveries", "cold_rebuilds",
+            "updater_restarts")]
+        fams += [(k, "gauge", float(m[k])) for k in (  # type: ignore
+            "consecutive_failures", "snapshot_seq", "snapshot_cert",
+            "version_lag", "pending_deltas", "snapshot_age_s",
+            "updater_alive")]
+        return render_prometheus(fams, prefix="repro_rank_server")
 
     def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
         if self._thread is None:

@@ -55,6 +55,7 @@ from ..runtime.driver import TerminationDriver
 from ..runtime.exchange import AllToAllPlan, ExchangePlan, SparsifiedPlan
 from ..runtime.executor import AsyncShardExecutor
 from ..runtime.faults import FaultPlan
+from ..runtime.observe import ShardObserver, attribute_frontier
 from ..runtime.state import ShardArena
 from ..runtime.transport import ProcPoolShardExecutor
 from .delta import DeltaGraph, EdgeDelta
@@ -87,6 +88,14 @@ class ShardedUpdateStats:
     transport: str = "threads"  # "threads" | "procpool" (async mode only)
     recoveries: int = 0        # supervised worker restarts (faults/crashes)
     recovery_s: float = 0.0    # total detection -> respawned time
+    # push-inflation attribution (observe=True, async mode): every
+    # frontier pop is exactly one of these, so first+local+boundary ==
+    # pushes on a fault-free run (a kill can lose counted-but-uncredited
+    # pops, leaving the sum a bounded over-count of `pushes`)
+    pushes_first: int = 0      # rows pushed for the first time this update
+    pushes_local: int = 0      # re-pushes from the shard's own sweep order
+    pushes_boundary: int = 0   # re-pushes re-activated by foreign mass
+    observed: Optional[dict] = None  # ShardObserver.observed() payload
 
 
 def _scatter_add(out: np.ndarray, idx: np.ndarray,
@@ -106,12 +115,16 @@ def _scatter_add(out: np.ndarray, idx: np.ndarray,
 def _drain_shard(arrays, x: np.ndarray, r: np.ndarray,
                  outbox: np.ndarray, s: int, e: int, alpha: float,
                  local_target: float, eps_floor: float,
-                 c_holder: list) -> int:
+                 c_holder: list, attr=None) -> int:
     """Drain shard rows [s, e) to ||r[s:e]||_1 <= local_target with batched
     frontier sweeps.  Contributions to own rows feed back into r (and keep
     draining); contributions to foreign rows accumulate into `outbox`
     (addressed by global row id); dangling mass accumulates into the shared
-    uniform scalar `c_holder[0]`.  Returns the number of pushes."""
+    uniform scalar `c_holder[0]`.  Returns the number of pushes.
+
+    `attr=(pushed, foreign, cnt)` arms push-inflation attribution: each
+    frontier is classified first/local/boundary into `cnt` (the shard's
+    (3,) row) before its flags advance (runtime/observe.py)."""
     n = r.shape[0]
     pushes = 0
     bs = e - s
@@ -130,6 +143,8 @@ def _drain_shard(arrays, x: np.ndarray, r: np.ndarray,
             eps = max(eps / 8.0, eps_floor)
             frontier = np.flatnonzero(np.abs(r_own) >= eps)
         frontier = frontier + s
+        if attr is not None:
+            attribute_frontier(attr[0], attr[1], attr[2], frontier)
         pushes += int(frontier.size)
         moved = r[frontier].copy()
         x[frontier] += moved
@@ -199,12 +214,44 @@ def _make_plan(exchange: str, p: int, l1_target: float,
     return AllToAllPlan(p)
 
 
+class _ShardDrain:
+    """The drain `_ShardDrainFactory` builds inside each worker: PR 5's
+    closure as an object, so the observing worker can wire attribution
+    through `set_observer` (`_procpool_worker_main` duck-types for it).
+    `_drain_shard` is resolved through the module at call time, so a
+    scoped override (the benchmark's modeled drain clock) reaches forked
+    workers too."""
+
+    def __init__(self, arrays, x: np.ndarray, r: np.ndarray,
+                 alpha: float, eps_floor: float):
+        self.arrays = arrays
+        self.x = x
+        self.r = r
+        self.alpha = alpha
+        self.eps_floor = eps_floor
+        self.obs: Optional[ShardObserver] = None
+
+    def set_observer(self, obs: Optional[ShardObserver]) -> None:
+        # attribution needs the per-row flags; a counters-only observer
+        # (synthetic drains) leaves the drain untouched
+        self.obs = obs if (obs is not None and obs.pushed is not None) \
+            else None
+
+    def __call__(self, i, s, e, step_target, outbox):
+        holder = [0.0]
+        obs = self.obs
+        attr = ((obs.pushed, obs.foreign, obs.attr[i])
+                if obs is not None else None)
+        got = _drain_shard(self.arrays, self.x, self.r, outbox, s, e,
+                           self.alpha, step_target, self.eps_floor,
+                           holder, attr)
+        return got, holder[0]
+
+
 class _ShardDrainFactory:
     """Picklable procpool DrainFactory: rebuilds the batched
     Gauss-Southwell sweep inside each worker process from the arena views
-    (`runtime.transport.DrainFactory` contract).  `_drain_shard` is
-    resolved through the module at call time, so a scoped override (the
-    benchmark's modeled drain clock) reaches forked workers too."""
+    (`runtime.transport.DrainFactory` contract)."""
 
     def __init__(self, alpha: float, eps_floor: float, base_n: int):
         self.alpha = alpha
@@ -215,15 +262,8 @@ class _ShardDrainFactory:
         arrays = (views["base_indptr"], views["base_indices"], self.base_n,
                   views["dirty_rows"], views["out_deg"],
                   views["dirty_indptr"], views["dirty_indices"])
-        x, r = views["x"], views["r"]
-        alpha, eps_floor = self.alpha, self.eps_floor
-
-        def drain_fn(i, s, e, step_target, outbox):
-            holder = [0.0]
-            got = _drain_shard(arrays, x, r, outbox, s, e, alpha,
-                               step_target, eps_floor, holder)
-            return got, holder[0]
-        return drain_fn
+        return _ShardDrain(arrays, views["x"], views["r"],
+                           self.alpha, self.eps_floor)
 
 
 def update_ranks_sharded(
@@ -238,7 +278,8 @@ def update_ranks_sharded(
         backend: str = "segment_sum", method: str = "linear",
         solver_max_iters: int = 1000,
         bytes_per_entry: int = 8,
-        faults: Optional[FaultPlan] = None
+        faults: Optional[FaultPlan] = None,
+        observe: bool = False
         ) -> Tuple[RankState, ShardedUpdateStats]:
     """Apply `delta` and certify the updated ranks with p shards.
 
@@ -269,6 +310,15 @@ def update_ranks_sharded(
     mass folded back; after such an abort re-certify via
     `refresh_residual` (or rebuild via `cold_state`) before trusting the
     state.
+
+    `observe=True` (async mode only) arms the runtime observer
+    (`runtime/observe.py`): per-shard metrics, a ring-buffered event
+    trace at the cycle seams, and push-inflation attribution — the
+    `pushes_first` / `pushes_local` / `pushes_boundary` decomposition on
+    the stats, with the full payload in `stats.observed` and a
+    Perfetto-loadable export via
+    `runtime.observe.write_chrome_trace(path, stats.observed["events"])`.
+    Off (the default) every hook is a skipped None-check: zero cost.
     """
     if state.version != dg.version:
         raise ValueError(
@@ -291,6 +341,9 @@ def update_ranks_sharded(
     if faulty and mode != "async":
         raise ValueError("faults= requires mode='async' (the superstep "
                          "loop has no transport seam to inject at)")
+    if observe and mode != "async":
+        raise ValueError("observe=True requires mode='async' (the "
+                         "superstep loop has no worker cycle to trace)")
     if delta.new_nodes and state.v is not None:
         raise NotImplementedError(
             "node arrivals with a custom teleport vector are not "
@@ -323,6 +376,12 @@ def update_ranks_sharded(
         # (with fresh protocol state) until it truly holds — the
         # published certificate is always the exact recompute.
         arena = None
+        # observe=True arms the runtime observer: threads share one
+        # in-process ShardObserver across every attempt; procpool grows
+        # each run's control arena with the obs_* slots (observe=True on
+        # the executor) and hands the payload back via res.observed
+        obs = (ShardObserver.alloc(p, n)
+               if observe and transport == "threads" else None)
         if transport == "procpool":
             # shard fragments move to shared memory once per update
             # batch; workers rebuild the drain from the arena views
@@ -338,8 +397,10 @@ def update_ranks_sharded(
         else:
             def drain_fn(i, s, e, step_target, outbox):
                 holder = [0.0]
+                attr = ((obs.pushed, obs.foreign, obs.attr[i])
+                        if obs is not None else None)
                 got = _drain_shard(arrays, x, r, outbox, s, e, alpha,
-                                   step_target, eps_floor, holder)
+                                   step_target, eps_floor, holder, attr)
                 return got, holder[0]
             r_run = r
 
@@ -352,6 +413,8 @@ def update_ranks_sharded(
         attempts = 0
         recoveries = 0
         recovery_s = 0.0
+        observed = None
+        attr_tot = np.zeros(3, dtype=np.int64)
         # kill/hang schedules fire once per *update*, so the fired flags
         # live here and cross every drain attempt (and, in procpool,
         # every worker restart via the control arena)
@@ -380,7 +443,8 @@ def update_ranks_sharded(
                         bytes_per_entry=bytes_per_entry,
                         max_rounds=100 * max_supersteps,
                         max_total_pushes=push_budget, n_workers=n_workers,
-                        faults=faults, fault_state=fstate)
+                        faults=faults, fault_state=fstate,
+                        observe=observe)
                     res = ex.run(factory, arena, x_key="x")
                 else:
                     ex = AsyncShardExecutor(
@@ -388,8 +452,20 @@ def update_ranks_sharded(
                         bytes_per_entry=bytes_per_entry,
                         max_rounds=100 * max_supersteps,
                         max_total_pushes=push_budget,
-                        faults=faults, fault_state=fstate)
+                        faults=faults, fault_state=fstate, observe=obs)
                     res = ex.run(drain_fn, r_run)
+                if res.observed is not None:
+                    # threads reuse one observer, so the last payload is
+                    # already cumulative; procpool arenas are per-attempt,
+                    # so attribution totals accumulate here (the trace in
+                    # `observed` covers the final attempt)
+                    observed = res.observed
+                    if transport == "procpool":
+                        a = res.observed.get("attribution")
+                        if a is not None:
+                            attr_tot += np.array(
+                                [a["first"], a["local"], a["boundary"]],
+                                dtype=np.int64)
                 pushes_per_shard += res.pushes_per_shard
                 exchanges += res.exchanges
                 bytes_moved += res.bytes_moved
@@ -417,6 +493,12 @@ def update_ranks_sharded(
                 r_run = None
                 arena.close()
 
+        if obs is not None:
+            # threads: one observer covered every attempt
+            observed = obs.observed()
+            if obs.attr is not None:
+                attr_tot = obs.attr.sum(axis=0)
+
         pushes = int(pushes_per_shard.sum())
         if resid <= l1_target and not capped:
             return state, ShardedUpdateStats(
@@ -426,7 +508,9 @@ def update_ranks_sharded(
                 cert=resid / (1.0 - alpha), stop_superstep=stop_round,
                 mode=mode, idle_s=idle_s, attempts=attempts,
                 transport=transport, recoveries=recoveries,
-                recovery_s=recovery_s)
+                recovery_s=recovery_s, pushes_first=int(attr_tot[0]),
+                pushes_local=int(attr_tot[1]),
+                pushes_boundary=int(attr_tot[2]), observed=observed)
         return _solver_fallback(
             dg, state, alpha=alpha, tol=tol, method=method,
             backend=backend, solver_max_iters=solver_max_iters,
@@ -435,7 +519,11 @@ def update_ranks_sharded(
                           exchanges=exchanges, bytes_moved=bytes_moved,
                           seed_l1=seed_l1, mode=mode, idle_s=idle_s,
                           attempts=max(attempts, 1), transport=transport,
-                          recoveries=recoveries, recovery_s=recovery_s))
+                          recoveries=recoveries, recovery_s=recovery_s,
+                          pushes_first=int(attr_tot[0]),
+                          pushes_local=int(attr_tot[1]),
+                          pushes_boundary=int(attr_tot[2]),
+                          observed=observed))
 
     local_target = l1_target / (2.0 * p)
     plan = _make_plan(exchange, p, l1_target, sparsify_thresh,
