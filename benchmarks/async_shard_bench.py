@@ -104,7 +104,8 @@ def _workload():
 
 def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
          transport: str = "threads", cost: str = "sleep",
-         n_workers=None, faults=None, observe: bool = False):
+         n_workers=None, faults=None, observe: bool = False,
+         schedule=None):
     """One sharded update; rate_per_shard (pushes/s, per shard) switches
     on the modeled drain clock via a scoped _drain_shard wrapper —
     `cost="sleep"` yields the GIL (dedicated-core model), `cost="burn"`
@@ -125,8 +126,8 @@ def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
     if rate_per_shard is not None:
         pay = _spin if cost == "burn" else time.sleep
 
-        def modeled_drain(arrays, x, r, outbox, s, e, *args):
-            got = real_drain(arrays, x, r, outbox, s, e, *args)
+        def modeled_drain(arrays, x, r, outbox, s, e, *args, **kwargs):
+            got = real_drain(arrays, x, r, outbox, s, e, *args, **kwargs)
             if got:
                 pay(got / rate_per_shard[min(s // part_size, p - 1)])
             return got
@@ -141,7 +142,8 @@ def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
             st, stats = update_ranks_sharded(dg, delta, st, p=p, tol=TOL,
                                              mode=mode, transport=transport,
                                              n_workers=n_workers,
-                                             faults=faults, observe=observe)
+                                             faults=faults, observe=observe,
+                                             schedule=schedule)
         dt = time.perf_counter() - t0
     finally:
         sharded_mod._drain_shard = real_drain

@@ -1,0 +1,98 @@
+"""CI gate: drain scheduling must kill the async scaling tax (PR 8).
+
+    python benchmarks/check_schedule_inflation.py [BENCH_PR8.json]
+
+Reads the ``schedule`` section of the given perf-trajectory file (default
+BENCH_PR8.json at the repo root) and gates the best schedule per
+transport on the acceptance workload (50k power-law, 1% delta,
+tol=1e-8, p=4 vs the p=1 default-schedule baseline):
+
+  * threads inflation  <= 1.20x   (default measured ~1.3-1.6x)
+  * procpool inflation <= 1.10x   (default measured ~1.2-1.3x)
+  * procpool burn p4-vs-p1 >= 2.6x — the measured wall-clock when the
+    bench host had >= 4 cores, else the machine-independent push-ratio
+    projection at 4 dedicated cores (the burn regime's wall-clock is
+    pushes * per-push cost, so the ratio converts 1:1)
+  * every arm's certificate holds (cert <= tol)
+
+Inflation ratios are push counts, not wall-clock, so the gate is
+machine-independent (the same reasoning as check_observe_overhead.py's
+burn comparison).
+
+Exit codes: 0 pass, 1 fail, 2 usage/missing section.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).parent.parent
+
+THREADS_LIMIT = 1.20
+PROCPOOL_LIMIT = 1.10
+BURN_FLOOR = 2.6
+
+
+def main() -> int:
+    target = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        REPO_ROOT / "BENCH_PR8.json"
+    if not target.is_absolute():
+        target = REPO_ROOT / target
+    if not target.exists():
+        print(f"schedule inflation gate: {target.name} not found")
+        return 2
+    rec = json.loads(target.read_text())
+    sched = rec.get("schedule")
+    if sched is None:
+        print(f"schedule inflation gate: no schedule section in "
+              f"{target.name}")
+        return 2
+
+    ok = True
+    tol = sched.get("tol", 1e-8)
+    for arm in sched.get("arms", []):
+        if arm["cert"] > tol:
+            ok = False
+            print(f"FAIL cert: {arm['transport']} p={arm['p']} "
+                  f"{arm.get('schedule')} cert={arm['cert']:.2e} > "
+                  f"tol={tol:.0e}")
+
+    for transport, limit in (("threads", THREADS_LIMIT),
+                             ("procpool", PROCPOOL_LIMIT)):
+        b = sched["best"][transport]
+        ratio = b["inflation_ratio"]
+        verdict = "OK" if ratio <= limit else "FAIL"
+        base = sched["summary"][transport]["default"]["inflation_ratio"]
+        print(f"{transport:9s} best={b['schedule']:18s} "
+              f"inflation={ratio:.3f}x (default {base:.3f}x, "
+              f"limit {limit}x) {verdict}")
+        if ratio > limit:
+            ok = False
+
+    burn = sched["burn"]
+    measured = burn.get("measured")
+    if measured is not None:
+        sp = measured["speedup_p4_vs_p1"]
+        verdict = "OK" if sp >= BURN_FLOOR else "FAIL"
+        print(f"procpool  burn measured {sp:.2f}x "
+              f"(floor {BURN_FLOOR}x, {burn['cores']} cores) {verdict}")
+        if sp < BURN_FLOOR:
+            ok = False
+    sp = burn["projected_speedup_p4_vs_p1"]
+    verdict = "OK" if sp >= BURN_FLOOR else "FAIL"
+    print(f"procpool  burn projected {sp:.2f}x at "
+          f"{burn['project_cores']} cores (floor {BURN_FLOOR}x, host has "
+          f"{burn['cores']}) {verdict}")
+    if sp < BURN_FLOOR:
+        ok = False
+
+    if not ok:
+        print("drain scheduling failed its acceptance gates — see "
+              "benchmarks/schedule_bench.py TUNED for the knobs and "
+              "docs/runtime.md 'Drain scheduling' for the levers")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

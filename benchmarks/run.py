@@ -6,10 +6,11 @@ beyond-paper studies. Prints ``name,us_per_call,derived`` CSV at the end.
 Every run (including --quick) starts with the matvec-backend bench, the
 streaming-update bench, the sharded-runtime bench (sparsified vs
 allgather), the async-executor bench (async vs superstep shard
-drains, threads vs procpool transports) and the observability bench
+drains, threads vs procpool transports), the observability bench
 (push-inflation attribution, chaos trace demo, zero-cost-when-off
-gate) and writes the machine-readable
-perf-trajectory file (``--out``, default BENCH_PR7.json) at the repo
+gate) and the drain-schedule bench (priority / boundary-batched /
+randomized inflation arms, PR 8) and writes the machine-readable
+perf-trajectory file (``--out``, default BENCH_PR8.json) at the repo
 root; ``--tier1-seconds`` embeds the measured suite runtime for the
 check_tier1_runtime.py gate; --quick then skips the slow DES paper-table
 and SPMD staleness studies.
@@ -31,7 +32,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR7.json",
+    ap.add_argument("--out", default="BENCH_PR8.json",
                     help="perf-trajectory output (BENCH_PR<N>.json for "
                          "PR N; relative paths land at the repo root)")
     ap.add_argument("--tier1-seconds", default=None,
@@ -153,6 +154,28 @@ def main() -> None:
         f"on_vs_off={ov['on_vs_off']:.3f}x,"
         f"within_{ov['limit']}x={ov['within_limit']}"))
     brec["observe"] = orec
+
+    print("== Drain schedules (priority/boundary/randomized inflation) ==")
+    from benchmarks import schedule_bench
+    screc = schedule_bench.main()
+    for transport in ("threads", "procpool"):
+        b = screc["best"][transport]
+        d0 = screc["summary"][transport]["default"]
+        csv_rows.append((
+            f"schedule_{transport}",
+            f"{b['pushes_p4']}",
+            f"best={b['schedule']}:{b['inflation_ratio']:.3f}x,"
+            f"default={d0['inflation_ratio']:.3f}x,"
+            f"local_excess={b['local_excess']},"
+            f"boundary={b['boundary_p4']}"))
+    csv_rows.append((
+        "schedule_burn",
+        f"{screc['burn']['projected_speedup_p4_vs_p1']:.3f}",
+        f"projected_p4_vs_p1={screc['burn']['projected_speedup_p4_vs_p1']}"
+        f"x_at_{screc['burn']['project_cores']}cores,"
+        f"measured={screc['burn']['measured']},"
+        f"cores={screc['burn']['cores']}"))
+    brec["schedule"] = screc
     if tier1_seconds is not None:
         brec["tier1_seconds"] = tier1_seconds
     out_path.write_text(json.dumps(brec, indent=1))

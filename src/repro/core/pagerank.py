@@ -62,8 +62,38 @@ def _pow2(k: int) -> int:
     return 1 << max(k - 1, 0).bit_length()
 
 
+# recheck cadences the adaptive driver may pick — `max_iters` is a static
+# jit arg, so arbitrary chunk lengths would each compile a fresh fused
+# loop; a pow2 menu bounds that axis to 6 entries shared across solves
+_CHUNK_MENU = (8, 16, 32, 64, 128, 256)
+
+
+def _adapt_chunk(prev_resid, resid, it: int, tol: float,
+                 fallback: int) -> int:
+    """Next recheck cadence from the observed per-lane convergence spread.
+
+    Each surviving lane's geometric decay rate over the last chunk
+    extrapolates to a predicted iterations-to-tol; the next host recheck
+    lands just past the *fastest* survivor's predicted crossing — that is
+    the earliest moment a freeze (and possibly a pow2 compaction) can
+    pay.  Tightly-clustered lanes thus get long chunks (few host syncs),
+    a wide spread gets short ones (fast lanes shed early).
+    """
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        rate = (resid / prev_resid) ** (1.0 / max(it, 1))
+        need = np.log(tol / resid) / np.log(rate)
+    need = need[np.isfinite(need) & (need > 0)]
+    if need.size == 0:              # stalled / non-contracting estimates
+        return fallback
+    k = 1.25 * float(need.min()) + 1.0   # margin: rates drift chunk-to-chunk
+    for c in _CHUNK_MENU:
+        if c >= k:
+            return c
+    return _CHUNK_MENU[-1]
+
+
 def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
-                  max_iters: int, chunk: int):
+                  max_iters: int, chunk):
     """Chunked driver that freezes converged lanes out of the fused apply.
 
     The fused while_loop only ever guarantees each lane's residual <= tol
@@ -72,9 +102,17 @@ def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
     stop paying for the slowest one.  Lanes are compacted at power-of-two
     stack widths (padding duplicates an active lane), bounding recompiles
     of the fused loop to log2(nv).
+
+    `chunk` is the host recheck cadence: an int pins a fixed count, the
+    default ``"auto"`` adapts it to the observed per-lane iteration
+    spread (see `_adapt_chunk`) — the first chunk is a fixed probe, every
+    later one is scheduled at the fastest survivor's predicted tol
+    crossing.
     """
     nv = meta.nv
     n = meta.n
+    adaptive = chunk == "auto"
+    cur = 32 if adaptive else max(int(chunk), 1)
     x_out = np.empty((n, nv))
     resid_out = np.full(nv, np.inf)
     lane_iters = np.zeros(nv, dtype=np.int64)
@@ -85,8 +123,9 @@ def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
                               np.zeros(width - nv, np.int64)])
         dev, meta, x_dev = take_lanes(meta, dev, x_dev, pad)
     it_total = 0
+    prev_resid = None               # survivors' residuals a chunk ago
     while True:
-        step = min(chunk, max_iters - it_total)
+        step = min(cur, max_iters - it_total)
         x_dev, resid_dev, it = _solve_jit(dev, x_dev, meta=meta,
                                           linear=linear, tol=tol,
                                           max_iters=step)
@@ -100,6 +139,11 @@ def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
             x_out[:, active] = x_np[:, :active.size]
             resid_out[active] = resid_np
             break
+        if adaptive and it > 0:
+            if prev_resid is not None:
+                cur = _adapt_chunk(prev_resid[~done], resid_np[~done],
+                                   it, tol, cur)
+            prev_resid = resid_np
         new_width = _pow2(int((~done).sum()))
         if done.any() and new_width < width:
             # freeze + compact: record the converged lanes, keep the rest
@@ -109,6 +153,8 @@ def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
             resid_out[frozen] = resid_np[done]
             keep_pos = np.flatnonzero(~done)
             active = active[~done]
+            if prev_resid is not None:
+                prev_resid = prev_resid[~done]
             idx = np.concatenate([keep_pos,
                                   np.full(new_width - keep_pos.size,
                                           keep_pos[0], np.int64)])
@@ -126,7 +172,7 @@ def solve_power(op: GoogleOperator, x0: Optional[np.ndarray] = None,
                 v: Optional[np.ndarray] = None,
                 reorder: Optional[str] = None,
                 freeze_lanes: Union[bool, str] = "auto",
-                freeze_chunk: int = 32) -> SolveResult:
+                freeze_chunk: Union[int, str] = "auto") -> SolveResult:
     """Normalization-free power method x <- G x (eq. 4).
 
     No per-step normalization is needed: G is column-stochastic so ||x||_1
@@ -140,7 +186,12 @@ def solve_power(op: GoogleOperator, x0: Optional[np.ndarray] = None,
     `freeze_lanes` masks already-converged lanes out of the fused apply
     (chunked driver, power-of-two lane compaction) so large teleport
     batches stop paying for their slowest lane; "auto" enables it from
-    nv >= 8.  Every lane still stops at residual <= tol.
+    nv >= 8.  Every lane still stops at residual <= tol.  `freeze_chunk`
+    sets the host recheck cadence: an int pins a fixed count, "auto"
+    (default) adapts it to the observed per-lane iteration spread — the
+    next recheck is scheduled at the fastest unconverged lane's predicted
+    tol crossing, so clustered lanes pay few host syncs and spread-out
+    lanes freeze early.
     """
     return _solve(op, x0, tol, max_iters, linear=False, dtype=dtype,
                   backend=backend, v=v, reorder=reorder,
@@ -154,7 +205,7 @@ def solve_linear(op: GoogleOperator, x0: Optional[np.ndarray] = None,
                  v: Optional[np.ndarray] = None,
                  reorder: Optional[str] = None,
                  freeze_lanes: Union[bool, str] = "auto",
-                 freeze_chunk: int = 32) -> SolveResult:
+                 freeze_chunk: Union[int, str] = "auto") -> SolveResult:
     """Jacobi/Richardson on (I - R) x = b (eq. 2 / eq. 7 sync form)."""
     return _solve(op, x0, tol, max_iters, linear=True, dtype=dtype,
                   backend=backend, v=v, reorder=reorder,
@@ -174,7 +225,7 @@ def _reordered(op: GoogleOperator, method: str):
 
 def _solve(op, x0, tol, max_iters, linear, dtype, backend="segment_sum",
            v=None, reorder=None, freeze_lanes="auto",
-           freeze_chunk=32) -> SolveResult:
+           freeze_chunk="auto") -> SolveResult:
     spec = as_spec(backend)
     squeeze = ((x0 is None or np.ndim(x0) == 1)
                and (v is None or np.ndim(v) == 1)
@@ -205,8 +256,7 @@ def _solve(op, x0, tol, max_iters, linear, dtype, backend="segment_sum",
                   else bool(freeze_lanes)) and meta.nv > 1
         if freeze:
             x, resid, iters, lane_iters = _solve_frozen(
-                dev, x0_dev, meta, linear, tol, max_iters,
-                max(int(freeze_chunk), 1))
+                dev, x0_dev, meta, linear, tol, max_iters, freeze_chunk)
         else:
             x_dev, resid, iters = _solve_jit(dev, x0_dev, meta=meta,
                                              linear=linear, tol=tol,

@@ -55,7 +55,7 @@ bulk-synchronous rendering of Fig. 1.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 import jax
@@ -91,12 +91,23 @@ class SPMDConfig:
     hub_quantile: float = 0.99    # rows above this row-nnz quantile -> COO
     freeze_lanes: bool = False    # freeze lanes whose monitor counter fired
     compact_lanes: bool = False   # pow2 lane *compaction* between shard_map
-    #                             # chunks: exit the while_loop once >= half
-    #                             # the lanes are frozen, shrink the (n, nv)
-    #                             # stack to the unfinished lanes (padded to
-    #                             # the next pow2) and re-enter — frozen
-    #                             # lanes stop costing flops instead of
-    #                             # being masked (requires freeze_lanes)
+    #                             # chunks: exit the while_loop once enough
+    #                             # lanes are frozen (see compact_exit),
+    #                             # shrink the (n, nv) stack to the
+    #                             # unfinished lanes (padded to the next
+    #                             # pow2) and re-enter — frozen lanes stop
+    #                             # costing flops instead of being masked
+    #                             # (requires freeze_lanes)
+    compact_exit: Union[str, float] = "auto"
+    #                             # when a compact chunk hands back to the
+    #                             # host: a float f exits once done lanes
+    #                             # >= ceil(f * lanes) (0.5 pins the
+    #                             # historic half rule on pow2 widths);
+    #                             # "auto" exits at the earliest count that
+    #                             # can actually shrink the pow2 stack and,
+    #                             # when the previous chunk's lane
+    #                             # completions clustered, runs to all-done
+    #                             # instead (a boundary would not pay)
     # --- sparsified schedule (runtime.ExchangePlan, §6 targeting) ---
     sparsify_k: int = 0           # max rows per payload; 0 = auto (bsize/8)
     sparsify_thresh: float = 0.0  # per-row |delta| floor (0 = any change)
@@ -284,6 +295,12 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
     if cfg.compact_lanes and not cfg.freeze_lanes:
         raise ValueError("compact_lanes=True requires freeze_lanes=True "
                          "(compaction shrinks the stack to unfrozen lanes)")
+    ce = cfg.compact_exit
+    if not (ce == "auto" or (isinstance(ce, (int, float))
+                             and not isinstance(ce, bool)
+                             and 0.0 < float(ce) <= 1.0)):
+        raise ValueError(f"compact_exit must be 'auto' or a fraction in "
+                         f"(0, 1], got {ce!r}")
     p = cfg.p
     n = op.n
     dtype = jnp.dtype(cfg.dtype)
@@ -344,12 +361,13 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
         op_args = tuple(jax.device_put(packed[k], sh("ue", None))
                         for k in ("src", "wgt", "rid"))
 
-    def run_chunk(vblk_np, x0_np, max_steps, compact_exit):
+    def run_chunk(vblk_np, x0_np, max_steps, compact_exit, exit_k=0):
         """One shard_map while_loop over the lanes of `vblk_np`
         ((p, bsize, nv_c) teleport blocks) from iterate `x0_np`.  With
-        `compact_exit` the loop also exits once >= half the lanes are
-        done (the pow2-compaction hook); otherwise behavior is the
-        pre-compaction loop verbatim."""
+        `compact_exit` the loop also exits once `exit_k` lanes are done
+        (the pow2-compaction hook, threshold picked by the host per
+        chunk); otherwise behavior is the pre-compaction loop
+        verbatim."""
         nv_c = vblk_np.shape[2]
         vblk = jax.device_put(np.ascontiguousarray(vblk_np),
                               sh("ue", None, None))
@@ -433,12 +451,12 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
                 keep = jnp.logical_and(~jnp.all(lane_done),
                                        step < max_steps)
                 if compact_exit:
-                    # the pow2-compaction hook: once >= half the lanes
-                    # are frozen, hand control back to the host so the
+                    # the pow2-compaction hook: once exit_k lanes are
+                    # frozen, hand control back to the host so the
                     # stack can shrink instead of masking dead lanes
                     keep = jnp.logical_and(
                         keep,
-                        2 * jnp.sum(lane_done.astype(jnp.int32)) < nv_c)
+                        jnp.sum(lane_done.astype(jnp.int32)) < exit_k)
                 return keep
 
             view0 = jax.lax.all_gather(myx, "ue").reshape(n_pad, nv_c)
@@ -503,12 +521,12 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
                                   bytes=comm_total))
     else:
         # ---- pow2 lane compaction between shard_map chunks -------------
-        # Run until >= half the active lanes are frozen, then shrink the
-        # (bsize, nv) stack to the survivors padded to the next pow2
-        # (padding duplicates a survivor so the Fig. 1 bits of every
-        # carried lane are real) and re-enter with the current fragments
-        # as x0.  Frozen lanes stop costing flops and exchange bytes;
-        # their results are recorded at the chunk boundary.
+        # Run until enough active lanes are frozen (compact_exit), then
+        # shrink the (bsize, nv) stack to the survivors padded to the
+        # next pow2 (padding duplicates a survivor so the Fig. 1 bits of
+        # every carried lane are real) and re-enter with the current
+        # fragments as x0.  Frozen lanes stop costing flops and exchange
+        # bytes; their results are recorded at the chunk boundary.
         frag_mat = np.zeros((p, bsize, nv))
         resid_mat = np.zeros((p, nv), dtype=cfg.dtype)
         lane_out = np.full(nv, -1, dtype=np.int64)
@@ -519,11 +537,34 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
         comm_total = 0
         rows_total = fulls_total = 0
         chunks = 0
+        prev_done_rel = None    # last chunk's lane-completion steps
+        prev_st = 0
         while True:
             chunks += 1
             budget = cfg.max_supersteps - steps_done
+            nv_c = cur_v.shape[2]
+            if ce != "auto":
+                exit_k = max(1, int(np.ceil(float(ce) * nv_c)))
+            else:
+                # the earliest done-count at which the pow2 stack width
+                # can actually shrink (on pow2 widths this is the
+                # historic half rule; ragged first chunks exit sooner)
+                half = (1 << max(nv_c - 1, 0).bit_length()) // 2
+                exit_k = max(1, nv_c - half)
+                # spread adaptation: when the previous chunk's lane
+                # completions clustered inside a quarter of the chunk,
+                # the survivors are expected to land together too — run
+                # this chunk to all-done instead of paying a compaction
+                # boundary the stragglers would immediately catch up to
+                if (prev_done_rel is not None and prev_done_rel.size >= 2
+                        and prev_st > 0
+                        and float(prev_done_rel.max() - prev_done_rel.min())
+                        <= 0.25 * prev_st):
+                    exit_k = nv_c + 1
             fr, st, rs, ls, rows_c, fulls_c = run_chunk(
-                cur_v, cur_x0, budget, True)
+                cur_v, cur_x0, budget, True, exit_k)
+            prev_done_rel = ls[np.asarray(real) & (ls >= 0)]
+            prev_st = st
             steps_done += st
             cb = chunk_bytes(len(active), st, rows_c, fulls_c)
             # the in-loop counters restarted at zero with this chunk's

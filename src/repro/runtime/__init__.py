@@ -40,6 +40,13 @@ three substrates that used to hand-roll it (`core.des`, `core.spmd`,
              trace_event export), and push-inflation attribution — the
              same arrays work in-process and as ShardArena views, and
              everything is zero-cost when off (docs/observability.md).
+  schedule — DrainSchedule: pluggable update ordering for the drain hot
+             paths — priority (D-Iteration fluid retention),
+             boundary-batched exchange coalescing, seeded randomized
+             control — selected by `ScheduleSpec` and threaded through
+             `update_ranks_sharded(schedule=)` / `WorkerConfig.schedule` /
+             `RankServer(drain_schedule=)`; mass accounting and the L1
+             certificate are schedule-independent by construction.
 """
 from .state import (ArenaHandle, ShardArena, ShardState,
                     sweep_stale_segments)
@@ -52,6 +59,9 @@ from .faults import (FaultPlan, FaultState, FaultyContext,
 from .observe import (EV_NAMES, OBS_COUNTERS, ShardObserver,
                       attribute_frontier, chrome_trace, render_prometheus,
                       write_chrome_trace)
+from .schedule import (DEFAULT_SCHEDULE, SCHEDULES, DrainOrder,
+                       ExchangeGate, PriorityOrder, RandomizedOrder,
+                       ScheduleSpec, make_schedule)
 from .supervisor import BackoffPolicy, RestartEvent, ShardSupervisor
 from .transport import (Channel, HostAllReduce, ProcPoolShardExecutor,
                         ReductionChannel, ShmRing, ThreadedShardTransport,
@@ -70,6 +80,8 @@ __all__ = [
     "BackoffPolicy", "RestartEvent", "ShardSupervisor",
     "ShardObserver", "EV_NAMES", "OBS_COUNTERS", "attribute_frontier",
     "chrome_trace", "write_chrome_trace", "render_prometheus",
+    "ScheduleSpec", "SCHEDULES", "DEFAULT_SCHEDULE", "make_schedule",
+    "DrainOrder", "PriorityOrder", "RandomizedOrder", "ExchangeGate",
     "Channel", "TransportContext", "WorkerConfig", "shard_worker_loop",
     "ThreadedShardTransport", "ProcPoolShardExecutor", "ShmRing",
     "default_pool_size", "ReductionChannel", "HostAllReduce", "mesh_psum",

@@ -67,6 +67,7 @@ from .driver import TerminationDriver
 from .exchange import ExchangePlan
 from .faults import FaultPlan, FaultState
 from .observe import ShardObserver
+from .schedule import DEFAULT_SCHEDULE, ScheduleSpec
 from .transport import (AsyncRunResult, DrainFn, PairMailbox,  # noqa: F401
                         ThreadedShardTransport, UniformAccumulator,
                         WorkerConfig)
@@ -93,7 +94,8 @@ class AsyncShardExecutor:
                  faults: Optional[FaultPlan] = None,
                  fault_state: Optional[FaultState] = None,
                  max_restarts: Optional[int] = None,
-                 observe: Optional[ShardObserver] = None):
+                 observe: Optional[ShardObserver] = None,
+                 schedule: ScheduleSpec = DEFAULT_SCHEDULE):
         if driver.p != part.p or plan.p != part.p:
             raise ValueError(f"partition ({part.p}), plan ({plan.p}) and "
                              f"driver ({driver.p}) disagree on p")
@@ -115,6 +117,9 @@ class AsyncShardExecutor:
         # an armed ShardObserver (runtime/observe.py) traces the run;
         # None keeps the zero-cost default
         self.observe = observe
+        # DrainSchedule spec: the worker loop builds its exchange gate
+        # from this (the drain-order half lives in the caller's DrainFn)
+        self.schedule = schedule
 
     def run(self, drain_fn: DrainFn, r: np.ndarray) -> AsyncRunResult:
         """Drive the drains until STOP or a cap; on return every mailbox,
@@ -133,7 +138,8 @@ class AsyncShardExecutor:
                 max_total_pushes=self.max_total_pushes,
                 idle_sleep=float(self.idle_sleep),
                 drain_frac=float(self.drain_frac),
-                hysteresis=float(self.hysteresis)),
+                hysteresis=float(self.hysteresis),
+                schedule=self.schedule),
             faults=self.faults, fault_state=self.fault_state,
             max_restarts=self.max_restarts, observe=self.observe)
         return transport.run(drain_fn, r)

@@ -76,6 +76,7 @@ from .observe import (C_CAPPED, C_CONVERGES, C_DIVERGES, C_DRAIN_MASS,
                       EV_CONVERGE, EV_DIVERGE, EV_DRAIN, EV_EXCHANGE,
                       EV_INTAKE, EV_RECOVERY, EV_STOP, ShardObserver,
                       obs_ctl_entries)
+from .schedule import DEFAULT_SCHEDULE, ScheduleSpec
 from .state import ArenaHandle, ShardArena
 from .supervisor import BackoffPolicy, ShardSupervisor
 
@@ -353,6 +354,13 @@ class WorkerConfig:
     ``hysteresis * drain_frac >= 1`` means no shard can ever clear its
     own gate — a livelock (every worker parks until the round cap).
     Found the hard way in the PR 5 procpool tuning sweep; rejected here.
+
+    `schedule` is the DrainSchedule spec (runtime/schedule.py): the loop
+    builds its boundary-batched exchange gate from it, and because the
+    config is pickled into procpool workers whole, the same spec reaches
+    every incarnation of every worker unchanged.  (The drain-order half of
+    a spec lives in the DrainFn — built by the caller's drain factory —
+    not here: the loop never looks inside a drain.)
     """
 
     l1_target: float
@@ -362,6 +370,7 @@ class WorkerConfig:
     idle_sleep: float = 2e-4
     drain_frac: float = 0.05
     hysteresis: float = 2.0
+    schedule: ScheduleSpec = DEFAULT_SCHEDULE
 
     def __post_init__(self):
         if self.hysteresis * self.drain_frac >= 1.0:
@@ -453,6 +462,9 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
     drain_floor = 0.5 * conv_target
     outbox = ctx.outbox(i)
     peers = [d for d in range(p) if d != i]
+    # boundary-batched DrainSchedule: pair shipments coalesce behind this
+    # gate (None for every other schedule — the zero-cost default)
+    gate = cfg.schedule.gate(p)
     # cached L1s of the two O(n) structures this worker owns — only
     # intake/drain/exchange can change them, so idle rounds cost O(p)
     # instead of O(n)
@@ -583,12 +595,23 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
                         # refresh — quiet pairs must not bank
                         # forced-refresh debt
                         plan.note_sent(i, d, updates)
+                        if gate is not None:
+                            gate.note_quiet(d, updates)
                         continue
                     sd, ed = part.block(d)
                     box = outbox[sd:ed]
                     mass = float(np.abs(box).sum())
                     if mass == 0.0:
                         plan.note_sent(i, d, updates)
+                        if gate is not None:
+                            gate.note_quiet(d, updates)
+                        continue
+                    if gate is not None and not gate.ready(
+                            d, updates, mass, step_target):
+                        # boundary-batched: the pair's mass keeps folding
+                        # in the outbox (still counted in this shard's
+                        # value) until the batch window expires or the
+                        # coalesced payload is worth a generation
                         continue
                     if not plan.gate_mass(i, d, updates, mass):
                         continue
@@ -611,6 +634,8 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
                     outbox_dirty = True
                     plan.note_sent(i, d, updates)
                     plan.on_result(i, d, True)
+                    if gate is not None:
+                        gate.note_sent(d, updates)
                     ctx.note_exchange(i, nz)
                     progressed = True
 
@@ -1363,7 +1388,8 @@ class ProcPoolShardExecutor:
                  restart_backoff: BackoffPolicy = BackoffPolicy(),
                  checkpoint_every: int = 32,
                  observe: bool = False,
-                 observe_event_cap: int = DEFAULT_EVENT_CAP):
+                 observe_event_cap: int = DEFAULT_EVENT_CAP,
+                 schedule: ScheduleSpec = DEFAULT_SCHEDULE):
         if driver.p != part.p or plan.p != part.p:
             raise ValueError(f"partition ({part.p}), plan ({plan.p}) and "
                              f"driver ({driver.p}) disagree on p")
@@ -1375,7 +1401,7 @@ class ProcPoolShardExecutor:
             l1_target=float(l1_target), bytes_per_entry=int(bytes_per_entry),
             max_rounds=int(max_rounds), max_total_pushes=max_total_pushes,
             idle_sleep=float(idle_sleep), drain_frac=float(drain_frac),
-            hysteresis=float(hysteresis))
+            hysteresis=float(hysteresis), schedule=schedule)
         cores = os.cpu_count() or 1
         if n_workers is None:
             n_workers = default_pool_size(self.p)

@@ -38,6 +38,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from ..core.pagerank import solve_linear, solve_power
+from ..runtime.schedule import make_schedule
 from .delta import DeltaGraph, EdgeDelta
 
 
@@ -262,7 +263,8 @@ def _frontier_contrib(arrays, frontier: np.ndarray, moved: np.ndarray,
 
 def _push(view, x: np.ndarray, r: np.ndarray, alpha: float,
           l1_target: float, visit_cap: int, max_pushes: int,
-          c_holder: Optional[list] = None) -> Tuple[bool, int, int, int]:
+          c_holder: Optional[list] = None,
+          order=None) -> Tuple[bool, int, int, int]:
     """Gauss-Southwell pushes against `view` (a DeltaGraph or
     FrozenGraphView) until ||r||_1 <= l1_target.  Mutates x and r in place.
 
@@ -290,6 +292,12 @@ def _push(view, x: np.ndarray, r: np.ndarray, alpha: float,
     the rescale identity, see update_ranks — keeping the push local.
     Without it the uniform mass is added densely.
 
+    `order` (a `runtime.schedule.DrainOrder` over all n rows) refines each
+    sweep's frontier — D-Iteration retention may empty a ladder level (the
+    ladder descends; retained fluid waits for the level where it matters)
+    but is released at eps_floor, so the empty-at-the-floor certificate
+    argument above holds under every schedule.
+
     Returns (certified, pushes, distinct_visited, frontier_peak);
     certified=False when a work cap fired first (callers fall back to a
     full solve; x and r stay a consistent pair — sweeps are atomic).
@@ -304,6 +312,8 @@ def _push(view, x: np.ndarray, r: np.ndarray, alpha: float,
     pushes = 0
     peak = 0
     cand: Optional[np.ndarray] = None   # None => full rescan at current eps
+    if order is not None:
+        order.begin_round()
     while True:
         if l1 <= l1_target:
             l1 = float(np.abs(r).sum())      # exact before reporting success
@@ -313,6 +323,9 @@ def _push(view, x: np.ndarray, r: np.ndarray, alpha: float,
             frontier = np.flatnonzero(np.abs(r) >= eps)
         else:
             frontier = cand[np.abs(r[cand]) >= eps]
+        if order is not None and frontier.size:
+            frontier = order.refine(np.abs(r[frontier]), frontier, eps,
+                                    eps <= eps_floor)
         if frontier.size == 0:
             if cand is not None:
                 cand = None                  # level drained: full rescan
@@ -334,6 +347,8 @@ def _push(view, x: np.ndarray, r: np.ndarray, alpha: float,
         visited[fresh] = True
         n_visited += int(fresh.size)
         pushes += int(frontier.size)
+        if order is not None:
+            order.note_drained(frontier)
 
         moved = r[frontier].copy()
         x[frontier] += moved
@@ -435,8 +450,8 @@ def update_ranks(dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
                  tol: float = 1e-8, backend: str = "segment_sum",
                  method: str = "linear", push_frontier_frac: float = 0.25,
                  max_push_factor: float = 20.0,
-                 solver_max_iters: int = 1000
-                 ) -> Tuple[RankState, UpdateStats]:
+                 solver_max_iters: int = 1000,
+                 schedule=None) -> Tuple[RankState, UpdateStats]:
     """Apply `delta` to `dg` and bring `state` to a certified solution of
     the mutated graph.
 
@@ -457,6 +472,14 @@ def update_ranks(dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
     target — emits a RuntimeWarning and the true (larger) certificate is
     reported in ``state.cert``/``stats.cert``.  `state` is mutated in
     place and also returned.
+
+    ``schedule`` (None, a name from `runtime.schedule.SCHEDULES`, or a
+    `ScheduleSpec`) selects the drain ordering for the push path —
+    ``"priority"`` (D-Iteration fluid retention) and ``"randomized"``
+    (seeded Ishii-Tempo subsetting) reorder the ladder's sweeps; the
+    boundary-batched rendering is exchange-side and a no-op here.  Every
+    schedule certifies identically: the exact residual recompute above is
+    schedule-independent.
     """
     if state.version != dg.version:
         raise ValueError(
@@ -501,9 +524,11 @@ def update_ranks(dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
 
     if frontier0 <= 4 * visit_cap:
         holder = [c] if uniform else None
+        spec = make_schedule(schedule)
+        order = (spec.order(n) if spec.drain_kind != "default" else None)
         drained, pushes, visited, peak = _push(
             dg, x, r, alpha, 0.9 * l1_target, visit_cap, max_pushes,
-            c_holder=holder)
+            c_holder=holder, order=order)
         if holder is not None:
             c = holder[0]
         gamma = 1.0 - c * n / (1.0 - alpha)

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..runtime.observe import render_prometheus
+from ..runtime.schedule import make_schedule
 from .delta import DeltaGraph, EdgeDelta, FrozenGraphView, merge_deltas
 from .incremental import (RankState, UpdateStats, _exact_residual,
                           cold_state, ppr_push, refresh_residual,
@@ -91,7 +92,8 @@ class RankServer:
                  exchange: str = "allgather",
                  shard_mode: str = "superstep",
                  shard_transport: str = "threads",
-                 shard_workers: Optional[int] = None):
+                 shard_workers: Optional[int] = None,
+                 drain_schedule=None):
         if updater not in ("incremental", "sharded"):
             raise ValueError(f"unknown updater {updater!r}; expected "
                              "'incremental' or 'sharded'")
@@ -125,6 +127,11 @@ class RankServer:
         self.shard_mode = shard_mode
         self.shard_transport = shard_transport
         self.shard_workers = shard_workers
+        # DrainSchedule (runtime/schedule.py): None, a SCHEDULES name, or
+        # a full ScheduleSpec — normalized once and threaded into every
+        # batch the updater applies (both updaters accept it; the
+        # certificate every snapshot publishes is schedule-independent)
+        self.drain_schedule = make_schedule(drain_schedule)
 
         # working buffer (updater-owned) + cold certification
         self._state: RankState = cold_state(
@@ -212,12 +219,14 @@ class RankServer:
                         mode=self.shard_mode,
                         transport=self.shard_transport,
                         n_workers=self.shard_workers,
-                        backend=self.backend, method=self.method)
+                        backend=self.backend, method=self.method,
+                        schedule=self.drain_schedule)
                 else:
                     self._state, stats = update_ranks(
                         self.dg, merged, self._state, tol=self.tol,
                         backend=self.backend, method=self.method,
-                        push_frontier_frac=self.push_frontier_frac)
+                        push_frontier_frac=self.push_frontier_frac,
+                        schedule=self.drain_schedule)
             except BaseException:
                 # the batch is only safe to retry when the graph did NOT
                 # advance (a failure after dg.apply means the delta is

@@ -56,6 +56,7 @@ from ..runtime.exchange import AllToAllPlan, ExchangePlan, SparsifiedPlan
 from ..runtime.executor import AsyncShardExecutor
 from ..runtime.faults import FaultPlan
 from ..runtime.observe import ShardObserver, attribute_frontier
+from ..runtime.schedule import ScheduleSpec, make_schedule
 from ..runtime.state import ShardArena
 from ..runtime.transport import ProcPoolShardExecutor
 from .delta import DeltaGraph, EdgeDelta
@@ -88,6 +89,7 @@ class ShardedUpdateStats:
     transport: str = "threads"  # "threads" | "procpool" (async mode only)
     recoveries: int = 0        # supervised worker restarts (faults/crashes)
     recovery_s: float = 0.0    # total detection -> respawned time
+    schedule: str = "default"  # DrainSchedule rendering the drain ran under
     # push-inflation attribution (observe=True, async mode): every
     # frontier pop is exactly one of these, so first+local+boundary ==
     # pushes on a fault-free run (a kill can lose counted-but-uncredited
@@ -115,7 +117,7 @@ def _scatter_add(out: np.ndarray, idx: np.ndarray,
 def _drain_shard(arrays, x: np.ndarray, r: np.ndarray,
                  outbox: np.ndarray, s: int, e: int, alpha: float,
                  local_target: float, eps_floor: float,
-                 c_holder: list, attr=None) -> int:
+                 c_holder: list, attr=None, order=None) -> int:
     """Drain shard rows [s, e) to ||r[s:e]||_1 <= local_target with batched
     frontier sweeps.  Contributions to own rows feed back into r (and keep
     draining); contributions to foreign rows accumulate into `outbox`
@@ -124,24 +126,39 @@ def _drain_shard(arrays, x: np.ndarray, r: np.ndarray,
 
     `attr=(pushed, foreign, cnt)` arms push-inflation attribution: each
     frontier is classified first/local/boundary into `cnt` (the shard's
-    (3,) row) before its flags advance (runtime/observe.py)."""
+    (3,) row) before its flags advance (runtime/observe.py).
+
+    `order` (a `runtime.schedule.DrainOrder`, local coords [0, e-s)) lets
+    a DrainSchedule refine each sweep's frontier — priority retention may
+    empty a ladder level (the ladder then descends: the retained rows wait
+    for the level where their fluid matters) but never the floor, so an
+    empty frontier at eps_floor still certifies the remaining mass is
+    below bs * eps_floor, schedule or not."""
     n = r.shape[0]
     pushes = 0
     bs = e - s
     if bs <= 0:
         return 0
+    if order is not None:
+        order.begin_round()
     while True:
         r_own = r[s:e]
         l1_own = float(np.abs(r_own).sum())
         if l1_own <= local_target:
             return pushes
         eps = max(l1_own / bs, eps_floor)
-        frontier = np.flatnonzero(np.abs(r_own) >= eps)
-        while frontier.size == 0:
+        while True:
+            frontier = np.flatnonzero(np.abs(r_own) >= eps)
+            if order is not None and frontier.size:
+                frontier = order.refine(np.abs(r_own[frontier]), frontier,
+                                        eps, eps <= eps_floor)
+            if frontier.size:
+                break
             if eps <= eps_floor:
                 return pushes
             eps = max(eps / 8.0, eps_floor)
-            frontier = np.flatnonzero(np.abs(r_own) >= eps)
+        if order is not None:
+            order.note_drained(frontier)
         frontier = frontier + s
         if attr is not None:
             attribute_frontier(attr[0], attr[1], attr[2], frontier)
@@ -164,7 +181,8 @@ def _drain_shard(arrays, x: np.ndarray, r: np.ndarray,
 
 def _exchange_epoch(plan: ExchangePlan, part: Partition, r: np.ndarray,
                     outboxes: List[np.ndarray], step: int,
-                    bytes_per_entry: int) -> Tuple[int, int]:
+                    bytes_per_entry: int, gates=None,
+                    step_target: float = 0.0) -> Tuple[int, int]:
     """One boundary-residual exchange epoch over every (src, dst) pair:
     consult the plan, deliver gated outboxes into the owners' rows of `r`,
     and return ``(exchanges, bytes_moved)`` for the payloads that actually
@@ -178,10 +196,17 @@ def _exchange_epoch(plan: ExchangePlan, part: Partition, r: np.ndarray,
     defeated — every later sub-threshold payload ships as a "forced
     refresh" (the PR 4 foregrounded bugfix; regression-tested in
     tests/test_executor.py).  Empty epochs ship nothing and count nothing:
-    `exchanges`/`bytes_moved` attribute only real payloads."""
+    `exchanges`/`bytes_moved` attribute only real payloads.
+
+    `gates` (per-shard `runtime.schedule.ExchangeGate`, boundary-batched
+    schedule) coalesces a pair's mass across epochs in front of the plan:
+    withheld mass stays in the outbox (still counted in the sender's
+    value) and the gate force-opens within `batch_updates` epochs, so the
+    bounded-delay argument composes additively with the plan's."""
     exchanges = 0
     bytes_moved = 0
     for i in range(part.p):
+        gate = gates[i] if gates is not None else None
         for d in range(part.p):
             if d == i or not plan.wants(i, d, step):
                 continue
@@ -190,6 +215,11 @@ def _exchange_epoch(plan: ExchangePlan, part: Partition, r: np.ndarray,
             mass = float(np.abs(box).sum())
             if mass == 0.0:
                 plan.note_sent(i, d, step)
+                if gate is not None:
+                    gate.note_quiet(d, step)
+                continue
+            if gate is not None and not gate.ready(d, step, mass,
+                                                   step_target):
                 continue
             if not plan.gate_mass(i, d, step, mass):
                 continue
@@ -198,6 +228,8 @@ def _exchange_epoch(plan: ExchangePlan, part: Partition, r: np.ndarray,
             box[:] = 0.0
             plan.note_sent(i, d, step)
             plan.on_result(i, d, True)
+            if gate is not None:
+                gate.note_sent(d, step)
             exchanges += 1
             bytes_moved += nz * (4 + bytes_per_entry)
     return exchanges, bytes_moved
@@ -223,12 +255,16 @@ class _ShardDrain:
     workers too."""
 
     def __init__(self, arrays, x: np.ndarray, r: np.ndarray,
-                 alpha: float, eps_floor: float):
+                 alpha: float, eps_floor: float,
+                 spec: Optional[ScheduleSpec] = None):
         self.arrays = arrays
         self.x = x
         self.r = r
         self.alpha = alpha
         self.eps_floor = eps_floor
+        self.spec = spec
+        self._orders: dict = {}   # shard id -> DrainOrder (lazy: a worker
+        #                         # only ever drains the shards it owns)
         self.obs: Optional[ShardObserver] = None
 
     def set_observer(self, obs: Optional[ShardObserver]) -> None:
@@ -237,6 +273,13 @@ class _ShardDrain:
         self.obs = obs if (obs is not None and obs.pushed is not None) \
             else None
 
+    def _order(self, i, s, e):
+        if self.spec is None:
+            return None
+        if i not in self._orders:
+            self._orders[i] = self.spec.order(e - s, shard=i)
+        return self._orders[i]
+
     def __call__(self, i, s, e, step_target, outbox):
         holder = [0.0]
         obs = self.obs
@@ -244,26 +287,31 @@ class _ShardDrain:
                 if obs is not None else None)
         got = _drain_shard(self.arrays, self.x, self.r, outbox, s, e,
                            self.alpha, step_target, self.eps_floor,
-                           holder, attr)
+                           holder, attr, self._order(i, s, e))
         return got, holder[0]
 
 
 class _ShardDrainFactory:
     """Picklable procpool DrainFactory: rebuilds the batched
     Gauss-Southwell sweep inside each worker process from the arena views
-    (`runtime.transport.DrainFactory` contract)."""
+    (`runtime.transport.DrainFactory` contract).  The ScheduleSpec rides
+    along (frozen dataclass, picklable); each worker incarnation builds
+    fresh per-shard DrainOrder state from it — retention and RNG state are
+    schedule heuristics, so losing them to a worker restart is sound."""
 
-    def __init__(self, alpha: float, eps_floor: float, base_n: int):
+    def __init__(self, alpha: float, eps_floor: float, base_n: int,
+                 spec: Optional[ScheduleSpec] = None):
         self.alpha = alpha
         self.eps_floor = eps_floor
         self.base_n = base_n
+        self.spec = spec
 
     def __call__(self, views):
         arrays = (views["base_indptr"], views["base_indices"], self.base_n,
                   views["dirty_rows"], views["out_deg"],
                   views["dirty_indptr"], views["dirty_indices"])
         return _ShardDrain(arrays, views["x"], views["r"],
-                           self.alpha, self.eps_floor)
+                           self.alpha, self.eps_floor, self.spec)
 
 
 def update_ranks_sharded(
@@ -279,7 +327,8 @@ def update_ranks_sharded(
         solver_max_iters: int = 1000,
         bytes_per_entry: int = 8,
         faults: Optional[FaultPlan] = None,
-        observe: bool = False
+        observe: bool = False,
+        schedule=None
         ) -> Tuple[RankState, ShardedUpdateStats]:
     """Apply `delta` and certify the updated ranks with p shards.
 
@@ -310,6 +359,17 @@ def update_ranks_sharded(
     mass folded back; after such an abort re-certify via
     `refresh_residual` (or rebuild via `cold_state`) before trusting the
     state.
+
+    `schedule=` selects the DrainSchedule rendering (a name or a
+    `runtime.schedule.ScheduleSpec`): "default", "priority" (D-Iteration
+    fluid retention — targets the threads transport's local cadence tax),
+    "boundary" / "boundary-batched" (exchange coalescing — targets the
+    procpool transport's boundary re-activation tax), "randomized"
+    (seeded Ishii-Tempo control arm), or "priority+boundary".  Schedules
+    reorder and delay pushes/shipments only — retained fluid stays in r,
+    batched mass stays in the counted outbox — so certificates are
+    schedule-independent (gated by tests/test_schedule.py; tuning
+    guidance in docs/runtime.md "Drain scheduling").
 
     `observe=True` (async mode only) arms the runtime observer
     (`runtime/observe.py`): per-shard metrics, a ring-buffered event
@@ -344,6 +404,10 @@ def update_ranks_sharded(
     if observe and mode != "async":
         raise ValueError("observe=True requires mode='async' (the "
                          "superstep loop has no worker cycle to trace)")
+    spec = make_schedule(schedule)
+    # the zero-cost contract: a spec whose drain rendering is the default
+    # ladder passes order=None straight through (every hook skipped)
+    drain_spec = spec if spec.drain_kind != "default" else None
     if delta.new_nodes and state.v is not None:
         raise NotImplementedError(
             "node arrivals with a custom teleport vector are not "
@@ -392,16 +456,17 @@ def update_ranks_sharded(
                 "dirty_indptr": arrays[5], "dirty_indices": arrays[6],
             })
             factory = _ShardDrainFactory(alpha=alpha, eps_floor=eps_floor,
-                                         base_n=int(arrays[2]))
+                                         base_n=int(arrays[2]),
+                                         spec=drain_spec)
             r_run = arena["r"]
         else:
-            def drain_fn(i, s, e, step_target, outbox):
-                holder = [0.0]
-                attr = ((obs.pushed, obs.foreign, obs.attr[i])
-                        if obs is not None else None)
-                got = _drain_shard(arrays, x, r, outbox, s, e, alpha,
-                                   step_target, eps_floor, holder, attr)
-                return got, holder[0]
+            # the same drain object the procpool factory builds, bound to
+            # the in-process arrays: per-shard DrainOrder state persists
+            # across drain attempts (retention/RNG are heuristics; the
+            # certificate never depends on them)
+            drain_fn = _ShardDrain(arrays, x, r, alpha, eps_floor,
+                                   drain_spec)
+            drain_fn.set_observer(obs)
             r_run = r
 
         pushes_per_shard = np.zeros(p, dtype=np.int64)
@@ -437,6 +502,16 @@ def update_ranks_sharded(
                 # into one push — same mass drained, more (cheaper) pops
                 push_budget = (2 * max_pushes
                                - int(pushes_per_shard.sum()))
+
+                # spec.drain_frac overrides the transport's drain-call
+                # granularity, clamped to keep hysteresis * drain_frac
+                # under the livelock bound 1.0 (WorkerConfig rejects it)
+                def _df_kw(hysteresis: float) -> dict:
+                    if spec.drain_frac is None:
+                        return {}
+                    return dict(drain_frac=min(float(spec.drain_frac),
+                                               0.95 / hysteresis))
+
                 if transport == "procpool":
                     ex = ProcPoolShardExecutor(
                         part, plan, driver, l1_target=l1_target,
@@ -444,7 +519,8 @@ def update_ranks_sharded(
                         max_rounds=100 * max_supersteps,
                         max_total_pushes=push_budget, n_workers=n_workers,
                         faults=faults, fault_state=fstate,
-                        observe=observe)
+                        observe=observe, schedule=spec,
+                        **_df_kw(ProcPoolShardExecutor.HYSTERESIS))
                     res = ex.run(factory, arena, x_key="x")
                 else:
                     ex = AsyncShardExecutor(
@@ -452,7 +528,9 @@ def update_ranks_sharded(
                         bytes_per_entry=bytes_per_entry,
                         max_rounds=100 * max_supersteps,
                         max_total_pushes=push_budget,
-                        faults=faults, fault_state=fstate, observe=obs)
+                        faults=faults, fault_state=fstate, observe=obs,
+                        schedule=spec,
+                        **_df_kw(2.0))
                     res = ex.run(drain_fn, r_run)
                 if res.observed is not None:
                     # threads reuse one observer, so the last payload is
@@ -510,7 +588,8 @@ def update_ranks_sharded(
                 transport=transport, recoveries=recoveries,
                 recovery_s=recovery_s, pushes_first=int(attr_tot[0]),
                 pushes_local=int(attr_tot[1]),
-                pushes_boundary=int(attr_tot[2]), observed=observed)
+                pushes_boundary=int(attr_tot[2]), observed=observed,
+                schedule=spec.name)
         return _solver_fallback(
             dg, state, alpha=alpha, tol=tol, method=method,
             backend=backend, solver_max_iters=solver_max_iters,
@@ -523,13 +602,26 @@ def update_ranks_sharded(
                           pushes_first=int(attr_tot[0]),
                           pushes_local=int(attr_tot[1]),
                           pushes_boundary=int(attr_tot[2]),
-                          observed=observed))
+                          observed=observed, schedule=spec.name))
 
     local_target = l1_target / (2.0 * p)
     plan = _make_plan(exchange, p, l1_target, sparsify_thresh,
                       sparsify_refresh_every)
     driver = TerminationDriver(p, pc_max_compute=pc_max_compute,
                                pc_max_monitor=pc_max_monitor)
+
+    # DrainSchedule state for the superstep rendering: per-shard frontier
+    # orders, per-shard exchange gates, and (randomized) a seeded
+    # per-superstep shard permutation — all deterministic given the spec,
+    # so this mode stays the replayable golden reference
+    orders = ([drain_spec.order(part.block(i)[1] - part.block(i)[0],
+                                shard=i) for i in range(p)]
+              if drain_spec is not None else [None] * p)
+    gates = ([spec.gate(p) for _ in range(p)]
+             if spec.batch_exchange else None)
+    shard_rng = (np.random.default_rng(
+        np.random.SeedSequence(entropy=int(spec.seed), spawn_key=(p,)))
+        if spec.drain_kind == "randomized" else None)
 
     outboxes = [np.zeros(n) for _ in range(p)]
     c_pending = [0.0]
@@ -551,18 +643,21 @@ def update_ranks_sharded(
         # decays geometrically across supersteps and the total push count
         # stays proportional to log(seed/target).
         step_target = max(local_target, 0.05 * prev_total / p)
-        for i in range(p):
+        shard_order = (shard_rng.permutation(p) if shard_rng is not None
+                       else range(p))
+        for i in shard_order:
             s, e = part.block(i)
             pushes_per_shard[i] += _drain_shard(
                 arrays, x, r, outboxes[i], s, e, alpha,
-                step_target, eps_floor, c_pending)
+                step_target, eps_floor, c_pending, order=orders[i])
         if int(pushes_per_shard.sum()) > max_pushes:
             capped = True
             break
 
         # ---- boundary-residual exchange (ExchangePlan) -----------------
         sent, moved = _exchange_epoch(plan, part, r, outboxes, step,
-                                      bytes_per_entry)
+                                      bytes_per_entry, gates=gates,
+                                      step_target=step_target)
         exchanges += sent
         bytes_moved += moved
         # the uniform scalar is shared state: fold it densely once all
@@ -599,7 +694,8 @@ def update_ranks_sharded(
             path="sharded_push", p=p, supersteps=step, pushes=pushes,
             pushes_per_shard=pushes_per_shard, exchanges=exchanges,
             bytes_moved=bytes_moved, seed_l1=seed_l1, resid_l1=total,
-            cert=total / (1.0 - alpha), stop_superstep=stop_superstep)
+            cert=total / (1.0 - alpha), stop_superstep=stop_superstep,
+            schedule=spec.name)
 
     return _solver_fallback(
         dg, state, alpha=alpha, tol=tol, method=method, backend=backend,
@@ -607,7 +703,7 @@ def update_ranks_sharded(
         stats_kw=dict(p=p, supersteps=step, pushes=pushes,
                       pushes_per_shard=pushes_per_shard,
                       exchanges=exchanges, bytes_moved=bytes_moved,
-                      seed_l1=seed_l1))
+                      seed_l1=seed_l1, schedule=spec.name))
 
 
 def _solver_fallback(dg: DeltaGraph, state: RankState, *, alpha: float,

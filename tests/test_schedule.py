@@ -1,0 +1,370 @@
+"""Drain-schedule tests (PR 8): the DrainSchedule seam must never touch
+soundness — every rendering certifies on every transport — while the
+schedule-specific machinery (priority retention, boundary gating,
+seeded randomized orders) behaves as documented.
+
+Layout:
+  * unit tests over `runtime.schedule` directly (spec validation, the
+    refine/gate contracts, the at-floor certificate release);
+  * small-graph integration (2k): seeded-randomized reproducibility in
+    the deterministic superstep mode, `update_ranks(schedule=)` and
+    `RankServer(drain_schedule=)` wiring;
+  * the 50k acceptance: every schedule certifies at tol=1e-8 against a
+    cold solve on both async transports (p=4 for the full matrix, p=2
+    spot checks — the matrix is economized; the full p sweep of the
+    default schedule lives in test_transport/test_streaming);
+  * a hypothesis property (skipped when hypothesis is absent, same
+    idiom as test_faults_property.py): the boundary gate's withhold
+    window never exceeds batch_updates local updates, for any mass
+    sequence — which is what makes the §6 forced-refresh bound degrade
+    additively (batch_updates + refresh_every), never break.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime.schedule import (DEFAULT_SCHEDULE, SCHEDULES,
+                                    ExchangeGate, PriorityOrder,
+                                    RandomizedOrder, ScheduleSpec,
+                                    make_schedule)
+from repro.streaming import (DeltaGraph, EdgeDelta, RankServer, cold_state,
+                             update_ranks, update_ranks_sharded)
+from repro.streaming.incremental import RankState
+
+TOL = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# ScheduleSpec: names, aliases, validation, seam selection
+# ---------------------------------------------------------------------------
+def test_spec_names_aliases_validation():
+    assert make_schedule(None) is DEFAULT_SCHEDULE
+    assert make_schedule("boundary-batched").name == "boundary"
+    assert make_schedule("boundary_batched").name == "boundary"
+    assert make_schedule("priority-boundary").name == "priority+boundary"
+    spec = ScheduleSpec(name="priority", retain_boost=3.0)
+    assert make_schedule(spec) is spec
+    with pytest.raises(ValueError, match="unknown schedule"):
+        make_schedule("fifo")
+    with pytest.raises(ValueError, match="batch_updates"):
+        ScheduleSpec(name="boundary", batch_updates=0)
+    with pytest.raises(ValueError, match="select_frac"):
+        ScheduleSpec(name="randomized", select_frac=0.0)
+    with pytest.raises(ValueError, match="retain_boost"):
+        ScheduleSpec(name="priority", retain_boost=0.5)
+    with pytest.raises(ValueError, match="drain_frac"):
+        ScheduleSpec(name="priority", drain_frac=1.5)
+
+
+def test_spec_seam_selection():
+    """drain_kind / batch_exchange route each name to exactly the hooks
+    it needs; the default spec arms nothing (the zero-cost path)."""
+    assert DEFAULT_SCHEDULE.order(100) is None
+    assert DEFAULT_SCHEDULE.gate(4) is None
+    for name in SCHEDULES:
+        spec = ScheduleSpec(name=name)
+        order, gate = spec.order(100), spec.gate(4)
+        assert (order is not None) == (spec.drain_kind != "default"), name
+        assert (gate is not None) == spec.batch_exchange, name
+    assert isinstance(ScheduleSpec(name="priority").order(10),
+                      PriorityOrder)
+    assert isinstance(ScheduleSpec(name="randomized").order(10),
+                      RandomizedOrder)
+    both = ScheduleSpec(name="priority+boundary")
+    assert isinstance(both.order(10), PriorityOrder)
+    assert isinstance(both.gate(4), ExchangeGate)
+
+
+def test_spec_is_picklable_and_frozen():
+    """The spec rides WorkerConfig across the procpool spawn boundary."""
+    import pickle
+    spec = ScheduleSpec(name="priority+boundary", retain_boost=2.0,
+                        batch_updates=8, drain_frac=0.38)
+    assert pickle.loads(pickle.dumps(spec)) == spec
+    with pytest.raises(AttributeError):
+        spec.name = "default"
+
+
+# ---------------------------------------------------------------------------
+# PriorityOrder: the boost bar, the at-floor release, retain_rounds
+# ---------------------------------------------------------------------------
+def test_priority_boost_bar_above_floor():
+    order = PriorityOrder(ScheduleSpec(name="priority", retain_boost=2.0),
+                          m=10)
+    order.begin_round()
+    frontier = np.array([1, 3, 5, 7])
+    absr = np.array([1.0, 2.5, 0.4, 8.0])   # eps = 1.0, bar = 2.0
+    kept = order.refine(absr, frontier, eps=1.0, at_floor=False)
+    assert kept.tolist() == [3, 7]           # only rows >= 2 * eps
+
+
+def test_priority_at_floor_releases_everything():
+    """At eps_floor deferral would fake the empty-frontier certificate:
+    refine must pass the frontier through untouched."""
+    order = PriorityOrder(ScheduleSpec(name="priority", retain_boost=8.0),
+                          m=10)
+    order.begin_round()
+    frontier = np.array([0, 2, 4])
+    absr = np.array([1.0, 1.1, 1.2])         # nothing clears 8 * eps
+    assert order.refine(absr, frontier, eps=1.0, at_floor=False).size == 0
+    kept = order.refine(absr, frontier, eps=1.0, at_floor=True)
+    assert np.array_equal(kept, frontier)
+
+
+def test_priority_retain_rounds_limits_bar_to_recent_rows():
+    """retain_rounds > 0 is the classic rendering: the bar applies only
+    to rows drained within the last retain_rounds rounds."""
+    spec = ScheduleSpec(name="priority", retain_boost=4.0, retain_rounds=1)
+    order = PriorityOrder(spec, m=10)
+    order.begin_round()
+    order.note_drained(np.array([1, 2]))
+    order.begin_round()                      # rows 1, 2 drained last round
+    frontier = np.array([1, 2, 3])
+    absr = np.array([1.5, 5.0, 1.5])         # eps = 1, bar = 4
+    kept = order.refine(absr, frontier, eps=1.0, at_floor=False)
+    # 1 is recent and below the bar -> retained; 2 is recent but clears
+    # the bar; 3 was never drained -> drains at eps
+    assert kept.tolist() == [2, 3]
+    order.begin_round()
+    order.begin_round()                      # retention expired for 1
+    kept = order.refine(absr, frontier, eps=1.0, at_floor=False)
+    assert kept.tolist() == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# RandomizedOrder: seeded, reproducible, never empty
+# ---------------------------------------------------------------------------
+def test_randomized_is_seeded_and_reproducible():
+    spec = ScheduleSpec(name="randomized", seed=42, select_frac=0.3)
+    frontier = np.arange(200)
+    absr = np.ones(200)
+    a = spec.order(200, shard=1)
+    b = spec.order(200, shard=1)
+    for _ in range(5):
+        ka = a.refine(absr, frontier, 1.0, False)
+        kb = b.refine(absr, frontier, 1.0, False)
+        assert np.array_equal(ka, kb)
+    # a different shard spawns a different (deterministic) stream
+    c = spec.order(200, shard=2)
+    assert not np.array_equal(c.refine(absr, frontier, 1.0, False),
+                              spec.order(200, shard=1)
+                              .refine(absr, frontier, 1.0, False))
+
+
+def test_randomized_never_empties_a_nonempty_frontier():
+    """>= 1 row per sweep is the progress/termination argument."""
+    spec = ScheduleSpec(name="randomized", seed=0, select_frac=0.01)
+    order = spec.order(50)
+    frontier = np.arange(50)
+    absr = np.ones(50)
+    for _ in range(50):
+        assert order.refine(absr, frontier, 1.0, False).size >= 1
+    # select_frac=1.0 and tiny frontiers pass through untouched
+    full = ScheduleSpec(name="randomized", select_frac=1.0).order(50)
+    assert np.array_equal(full.refine(absr, frontier, 1.0, False), frontier)
+    one = np.array([7])
+    assert np.array_equal(order.refine(absr[:1], one, 1.0, False), one)
+
+
+# ---------------------------------------------------------------------------
+# ExchangeGate: force-open window, mass early-ship, quiet restart
+# ---------------------------------------------------------------------------
+def test_gate_force_opens_within_batch_updates():
+    gate = ExchangeGate(ScheduleSpec(name="boundary", batch_updates=4,
+                                     batch_mass_frac=0.5), p=3)
+    gate.note_sent(1, updates=10)
+    # tiny mass: withheld until the window expires at updates >= 14
+    for u in (11, 12, 13):
+        assert not gate.ready(1, u, mass=1e-12, step_target=1.0)
+    assert gate.ready(1, 14, mass=0.0, step_target=1.0)
+    assert gate.ready(1, 99, mass=0.0, step_target=1.0)   # monotone
+
+
+def test_gate_significant_mass_ships_immediately():
+    gate = ExchangeGate(ScheduleSpec(name="boundary", batch_updates=64,
+                                     batch_mass_frac=0.5), p=2)
+    gate.note_sent(0, updates=0)
+    assert not gate.ready(0, 1, mass=0.49, step_target=1.0)
+    assert gate.ready(0, 1, mass=0.51, step_target=1.0)
+
+
+def test_gate_quiet_pair_restarts_window():
+    """An empty pair 'ships' vacuously: the next trickle gets a full
+    batch window instead of inheriting a stale timestamp."""
+    gate = ExchangeGate(ScheduleSpec(name="boundary", batch_updates=4),
+                        p=2)
+    gate.note_sent(0, updates=0)
+    gate.note_quiet(0, updates=10)
+    assert not gate.ready(0, 12, mass=1e-12, step_target=1.0)
+    assert gate.ready(0, 14, mass=1e-12, step_target=1.0)
+
+
+def test_gate_bounded_delay_composes_with_sparsified_refresh():
+    """The composed §6 bound the docs pin: gate withhold (batch_updates)
+    + plan forced refresh (refresh_every), additive."""
+    spec = ScheduleSpec(name="boundary", batch_updates=8)
+    refresh_every = 16
+    assert spec.batch_updates + refresh_every == 24  # doc'd composition
+
+
+# hypothesis property: for ANY update/mass sequence, the gate never
+# withholds a pair for more than batch_updates updates past its last
+# ship/quiet point (module skips cleanly when hypothesis is absent)
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(batch=st.integers(1, 16),
+           masses=st.lists(st.floats(0, 10), min_size=1, max_size=200),
+           target=st.floats(0.1, 100.0))
+    def test_gate_withhold_window_is_bounded(batch, masses, target):
+        spec = ScheduleSpec(name="boundary", batch_updates=batch)
+        gate = ExchangeGate(spec, p=1)
+        last_open = 0
+        for u, mass in enumerate(masses, start=1):
+            if gate.ready(0, u, mass, target):
+                gate.note_sent(0, u)
+                last_open = u
+            assert u - last_open < batch, \
+                "gate withheld a pair past its batch window"
+except ImportError:      # pragma: no cover - CI installs hypothesis
+    pass
+
+
+# ---------------------------------------------------------------------------
+# small-graph integration: reproducibility + single-updater wiring
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_state(small_graph):
+    dg = DeltaGraph(small_graph)
+    base = cold_state(dg, tol=1e-10)
+    rng = np.random.default_rng(5)
+    delta = EdgeDelta.inserts(rng.integers(0, dg.n, 40),
+                              rng.integers(0, dg.n, 40))
+    return dg.base_graph if hasattr(dg, "base_graph") else small_graph, \
+        base, delta
+
+
+def _fresh(small_graph, base):
+    dg = DeltaGraph(small_graph)
+    st = RankState(x=base.x.copy(), r=base.r.copy(), version=0,
+                   alpha=base.alpha)
+    return dg, st
+
+
+def test_randomized_superstep_is_reproducible(small_graph, small_state):
+    """Superstep mode is the deterministic golden reference: the seeded
+    randomized schedule must replay bit-for-bit, and a different seed
+    must produce a different drain order."""
+    _, base, delta = small_state
+    outs = []
+    for seed in (9, 9, 10):
+        dg, st = _fresh(small_graph, base)
+        spec = ScheduleSpec(name="randomized", seed=seed)
+        st, stats = update_ranks_sharded(dg, delta, st, p=3, tol=TOL,
+                                         mode="superstep", schedule=spec)
+        assert stats.cert <= TOL
+        outs.append((st.x.copy(), stats.pushes))
+    assert np.array_equal(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1]
+    # different seed -> different schedule (pushes and/or iterate)
+    assert (outs[0][1] != outs[2][1]
+            or not np.array_equal(outs[0][0], outs[2][0]))
+
+
+def test_update_ranks_schedule_kwarg(small_graph, small_state):
+    """The single-updater push path takes schedule= too (priority and
+    randomized only; boundary is exchange-side and a no-op here)."""
+    _, base, delta = small_state
+    for sched in ("priority", "randomized",
+                  ScheduleSpec(name="priority", retain_boost=2.0)):
+        dg = DeltaGraph(small_graph)
+        st = RankState(x=base.x.copy(), r=base.r.copy(), version=0,
+                       alpha=base.alpha)
+        st, stats = update_ranks(dg, delta, st, tol=TOL, schedule=sched)
+        assert stats.cert <= TOL, sched
+    with pytest.raises(ValueError, match="unknown schedule"):
+        dg = DeltaGraph(small_graph)
+        st = RankState(x=base.x.copy(), r=base.r.copy(), version=0,
+                       alpha=base.alpha)
+        update_ranks(dg, delta, st, tol=TOL, schedule="lifo")
+
+
+def test_rank_server_drain_schedule(small_graph, small_state):
+    _, base, delta = small_state
+    srv = RankServer(DeltaGraph(small_graph), updater="sharded", shards=3,
+                     drain_schedule="priority+boundary", cold_tol=1e-7)
+    assert srv.drain_schedule.name == "priority+boundary"
+    srv.ingest(delta)
+    stats = srv.apply_pending()
+    assert stats is not None
+    snap = srv.snapshot()
+    assert snap.cert <= srv.tol * 10  # certified publish (path-dependent)
+    # incremental updater accepts it too
+    srv2 = RankServer(DeltaGraph(small_graph), drain_schedule="priority",
+                      cold_tol=1e-7)
+    srv2.ingest(delta)
+    assert srv2.apply_pending() is not None
+
+
+# ---------------------------------------------------------------------------
+# 50k acceptance: every schedule certifies on both transports
+# ---------------------------------------------------------------------------
+def _accept_run(accept_graph, accept_delta, accept_base, accept_cold,
+                transport, p, schedule):
+    dg = DeltaGraph(accept_graph)
+    st = RankState(x=accept_base.x.copy(), r=accept_base.r.copy(),
+                   version=0, alpha=accept_base.alpha)
+    st, stats = update_ranks_sharded(dg, accept_delta, st, p=p, tol=TOL,
+                                     mode="async", transport=transport,
+                                     schedule=schedule)
+    assert stats.path == "sharded_push", (transport, p, schedule, stats)
+    assert stats.cert <= TOL, (transport, p, schedule, stats.cert)
+    assert stats.schedule == make_schedule(schedule).name
+    l1 = np.abs(st.x - accept_cold).sum()
+    assert l1 < 2 * TOL, (transport, p, schedule, l1)
+
+
+@pytest.mark.parametrize("schedule", [s for s in SCHEDULES
+                                      if s != "default"])
+@pytest.mark.parametrize("transport", ["threads", "procpool"])
+def test_accept_schedules_certify_50k(accept_graph, accept_delta,
+                                      accept_base, accept_cold,
+                                      transport, schedule):
+    """Every non-default schedule, both transports, p=4: certified at
+    tol=1e-8 against the cold solve (the exact post-fold recompute is
+    schedule-independent — this is the PR 8 soundness acceptance)."""
+    _accept_run(accept_graph, accept_delta, accept_base, accept_cold,
+                transport, 4, schedule)
+
+
+@pytest.mark.parametrize("transport,schedule", [
+    ("threads", ScheduleSpec(name="priority", retain_boost=2.0,
+                             drain_frac=0.45)),
+    ("procpool", ScheduleSpec(name="priority+boundary", retain_boost=2.0,
+                              batch_updates=8, drain_frac=0.38)),
+])
+def test_accept_tuned_specs_certify_50k_p2(accept_graph, accept_delta,
+                                           accept_base, accept_cold,
+                                           transport, schedule):
+    """p=2 spot checks with the BENCH_PR8 tuned knobs (the exact specs
+    benchmarks/schedule_bench.py gates)."""
+    _accept_run(accept_graph, accept_delta, accept_base, accept_cold,
+                transport, 2, schedule)
+
+
+def test_accept_boundary_with_sparsified_plan_50k(accept_graph,
+                                                  accept_delta,
+                                                  accept_base,
+                                                  accept_cold):
+    """Boundary batching composes with the §6 sparsified plan: both
+    delays (gate batch window + forced refresh) stack without breaking
+    the certificate."""
+    dg = DeltaGraph(accept_graph)
+    st = RankState(x=accept_base.x.copy(), r=accept_base.r.copy(),
+                   version=0, alpha=accept_base.alpha)
+    st, stats = update_ranks_sharded(dg, accept_delta, st, p=4, tol=TOL,
+                                     mode="async", transport="threads",
+                                     exchange="sparsified",
+                                     schedule="boundary")
+    assert stats.cert <= TOL
+    assert np.abs(st.x - accept_cold).sum() < 2 * TOL

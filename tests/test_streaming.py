@@ -13,11 +13,18 @@ import pytest
 from repro.graph.generate import powerlaw_webgraph
 from repro.graph.google import exact_pagerank
 from repro.core import solve_power, solve_linear, block_rows
-from repro.streaming import (DeltaGraph, EdgeDelta, RankServer, ReplayConfig,
-                             StreamingBlockOperator, cold_state, merge_deltas,
-                             ppr_push, refresh_residual, replay_trace,
-                             synth_edge_trace, update_ranks,
+from repro.streaming import (DeltaGraph, EdgeDelta, RankServer, RankState,
+                             ReplayConfig, StreamingBlockOperator, cold_state,
+                             merge_deltas, ppr_push, refresh_residual,
+                             replay_trace, synth_edge_trace, update_ranks,
                              update_ranks_sharded)
+
+
+def _warm(base):
+    """Fresh mutable copy of the session-scoped certified 50k warm start
+    (the fixture state is shared — never hand it to a mutating updater)."""
+    return RankState(x=base.x.copy(), r=base.r.copy(), version=0,
+                     alpha=base.alpha)
 
 
 def _edge_set(g):
@@ -236,11 +243,13 @@ def test_stale_state_rejected(dgraph):
 @pytest.mark.parametrize("backend,tol", [("segment_sum", 1e-6),
                                          ("bsr_pallas", 1e-4)])
 def test_accept_one_percent_delta_50k(accept_graph, accept_delta,
-                                      accept_cold, backend, tol):
+                                      accept_cold, accept_base, backend, tol):
     """Incremental update after a 1% delta lands within tol (L1) of a cold
-    solve_power on the mutated graph — both backends."""
+    solve_power on the mutated graph — both backends.  Warm-starts from the
+    session-certified accept_base instead of re-running a per-arm 50k cold
+    solve (the delta re-perturbs the residual either way)."""
     dg = DeltaGraph(accept_graph)
-    st = cold_state(dg, tol=min(tol, 1e-6), backend="segment_sum")
+    st = _warm(accept_base)
     st, stats = update_ranks(dg, accept_delta, st, tol=0.8 * tol,
                              backend=backend)
     assert stats.cert <= 0.8 * tol
@@ -248,10 +257,10 @@ def test_accept_one_percent_delta_50k(accept_graph, accept_delta,
     assert l1 < tol, (backend, l1)
 
 
-def test_accept_single_edge_push_locality(accept_graph):
+def test_accept_single_edge_push_locality(accept_graph, accept_base):
     """Single-edge deltas take the push path and visit < 20% of nodes."""
     dg = DeltaGraph(accept_graph)
-    st = cold_state(dg, tol=1e-5)
+    st = _warm(accept_base)
     rng = np.random.default_rng(7)
     g = accept_graph
     for _ in range(3):
@@ -328,7 +337,7 @@ def test_sharded_rejects_stale_state_and_bad_args(dgraph):
 
 
 def test_accept_sharded_one_percent_delta_50k(accept_graph, accept_delta,
-                                              accept_cold):
+                                              accept_cold, accept_base):
     """ISSUE 3 acceptance: the sharded updater (p=4) applies the 1% delta
     on the 50k graph and certifies ||x - x*||_1 <= tol against the cold
     solve, with the certificate produced by the Fig. 1 TerminationDriver
@@ -336,7 +345,7 @@ def test_accept_sharded_one_percent_delta_50k(accept_graph, accept_delta,
     tol = 1e-6
     for exchange in ("allgather", "sparsified"):
         dg = DeltaGraph(accept_graph)
-        st = cold_state(dg, tol=0.5 * tol)
+        st = _warm(accept_base)
         st, stats = update_ranks_sharded(dg, accept_delta, st, p=4,
                                          tol=0.8 * tol, exchange=exchange)
         assert stats.path == "sharded_push", (exchange, stats)
@@ -388,18 +397,15 @@ def test_rank_server_async_shard_mode():
 
 
 def test_accept_async_one_percent_delta_50k(accept_graph, accept_delta,
-                                            accept_cold):
+                                            accept_cold, accept_base):
     """ISSUE 4 acceptance: mode="async" certifies the 1% delta on the 50k
     graph at tol=1e-8 for p in {2, 4} with zero inter-drain barriers —
     termination only via the routed Fig. 1 messages of the
     AsyncShardExecutor, the certificate the exact folded-back residual."""
-    from repro.streaming import RankState
     tol = 1e-8
-    st0 = cold_state(DeltaGraph(accept_graph), tol=0.5 * tol)
     for p in (2, 4):
         dg = DeltaGraph(accept_graph)
-        st = RankState(x=st0.x.copy(), r=st0.r.copy(), version=0,
-                       alpha=st0.alpha)
+        st = _warm(accept_base)
         st, stats = update_ranks_sharded(dg, accept_delta, st, p=p,
                                          tol=tol, mode="async")
         assert stats.path == "sharded_push", (p, stats)
@@ -639,3 +645,69 @@ def test_lane_freezing_matches_unfrozen(backend, tol):
     assert frz.lane_iters.min() < frz.lane_iters.max()
     assert frz.lane_iters.max() == frz.iters
     assert np.abs(frz.x - ref.x).max() < 2 * tol / 0.15
+
+
+def test_adaptive_freeze_chunk_certifies_and_freezes():
+    """freeze_chunk="auto" (the default): the recheck cadence adapts to
+    the observed per-lane spread; every lane still meets the tol contract
+    and warm lanes still freeze ahead of cold ones."""
+    g = powerlaw_webgraph(n=1100, target_nnz=8500, n_dangling=6, seed=51)
+    from repro.graph.csr import TransitionT
+    from repro.graph.google import GoogleOperator
+    op = GoogleOperator(pt=TransitionT.from_graph(g), alpha=0.85)
+    rng = np.random.default_rng(52)
+    nv = 8
+    V = rng.random((op.n, nv))
+    V /= V.sum(axis=0)
+    X0 = np.full((op.n, nv), 1.0 / op.n)
+    for k in range(nv // 2):
+        X0[:, k] = solve_power(op, tol=1e-12, v=V[:, k]).x
+    auto = solve_power(op, tol=1e-9, v=V, x0=X0, freeze_lanes=True)
+    ref = solve_power(op, tol=1e-9, v=V, x0=X0, freeze_lanes=False)
+    assert (auto.resid_per_vec <= 1e-9).all()
+    assert auto.lane_iters.min() < auto.lane_iters.max()
+    assert auto.lane_iters.max() == auto.iters
+    assert np.abs(auto.x - ref.x).max() < 2e-9 / 0.15
+    # a cadence that is neither an int nor "auto" is rejected
+    with pytest.raises(ValueError):
+        solve_power(op, tol=1e-6, v=V, x0=X0, freeze_lanes=True,
+                    freeze_chunk="sometimes")
+
+
+def test_adapt_chunk_predicts_from_lane_rates():
+    """Unit contract of the spread extrapolation: the next recheck lands
+    just past the fastest survivor's predicted tol crossing, drawn from
+    the pow2 menu; stalled estimates fall back to the previous cadence."""
+    from repro.core.pagerank import _CHUNK_MENU, _adapt_chunk
+    # 100x decay over 32 iters from 1e-8: 16 predicted iters to 1e-9,
+    # times the 1.25 drift margin -> menu entry 32
+    assert _adapt_chunk(np.array([1e-6]), np.array([1e-8]), 32,
+                        1e-9, 8) == 32
+    # slow geometric decay extrapolates past the menu -> clamped to max
+    assert _adapt_chunk(np.array([1e-2]), np.array([9e-3]), 32,
+                        1e-9, 32) == _CHUNK_MENU[-1]
+    # non-contracting lanes give no finite estimate -> fallback
+    assert _adapt_chunk(np.array([1e-6]), np.array([1e-6]), 32,
+                        1e-9, 99) == 99
+    # the fastest of a spread-out pack sets the cadence (freeze early):
+    # adding a near-stalled lane must not lengthen the recheck
+    fast_only = _adapt_chunk(np.array([1e-6]), np.array([1e-8]), 32,
+                             1e-9, 8)
+    fast_and_slow = _adapt_chunk(np.array([1e-6, 1e-1]),
+                                 np.array([1e-8, 9e-2]), 32, 1e-9, 8)
+    assert fast_and_slow == fast_only
+
+
+def test_spmd_compact_exit_validation():
+    """compact_exit must be "auto" or a fraction in (0, 1] — checked
+    before any device work, so this runs on the single-CPU host."""
+    from repro.core import SPMDConfig, solve_spmd
+    g = powerlaw_webgraph(n=300, target_nnz=2400, n_dangling=4, seed=1)
+    from repro.graph.csr import TransitionT
+    from repro.graph.google import GoogleOperator
+    op = GoogleOperator(pt=TransitionT.from_graph(g), alpha=0.85)
+    for bad in (0.0, 1.5, -0.2, "half", True):
+        cfg = SPMDConfig(p=1, freeze_lanes=True, compact_lanes=True,
+                         compact_exit=bad)
+        with pytest.raises(ValueError):
+            solve_spmd(op, cfg)
