@@ -48,19 +48,34 @@ Measurement regimes:
       recovery time and total overhead vs the no-fault baseline, with
       the certificate required to hold in every row.
 
+  device (PR 9)
+      The acceptance workload drained by ``transport="device"`` — the
+      traced ShardStep as p shard programs over forced host devices
+      (``XLA_FLAGS=--xla_force_host_platform_device_count=4``) — at
+      p=1 and p=4.  The rows run in a subprocess because this process's
+      jax is already initialized single-device; each p is run twice and
+      the warm (second) wall-clock is the throughput row, so the jit
+      compile is not billed to the drain.  The certificate must hold and
+      the recorded bytes must reproduce from the (rows, fulls) counters
+      through ``step.comm_bytes_model`` —
+      benchmarks/check_device_transport.py gates both.
+
 Emits benchmarks/results/async_shard_bench.json and feeds the
-``async_shard`` section of BENCH_PR6.json via benchmarks/run.py.
+``async_shard`` section of BENCH_PR9.json via benchmarks/run.py.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 from pathlib import Path
 
 import numpy as np
 
 RESULTS = Path(__file__).parent / "results"
+REPO = Path(__file__).parent.parent
 
 PS = (1, 2, 4, 8)
 TOL = 1e-8
@@ -167,6 +182,58 @@ def _run(g, delta, base, mode: str, p: int, rate_per_shard=None,
     return row
 
 
+_DEVICE_CODE = """
+import json, time
+import numpy as np
+from benchmarks.async_shard_bench import TOL, _workload
+from repro.streaming import DeltaGraph, update_ranks_sharded
+from repro.streaming.incremental import RankState
+
+g, delta, base = _workload()
+rows = []
+for p in (1, 4):
+    best = None
+    for run in range(2):          # second run is warm (jit cached per p)
+        dg = DeltaGraph(g)
+        st = RankState(x=base.x.copy(), r=base.r.copy(), version=0,
+                       alpha=base.alpha)
+        t0 = time.perf_counter()
+        st, stats = update_ranks_sharded(dg, delta, st, p=p, tol=TOL,
+                                         mode="async", transport="device")
+        dt = time.perf_counter() - t0
+        row = dict(mode="async", p=p, transport="device",
+                   s=round(dt, 3), path=stats.path,
+                   supersteps=int(stats.supersteps),
+                   exchanges=int(stats.exchanges),
+                   rows_sent=int(stats.rows_sent), fulls=int(stats.fulls),
+                   bytes_moved=int(stats.bytes_moved),
+                   cert=float(stats.cert), attempts=int(stats.attempts),
+                   device_resid=float(stats.device_resid))
+        if run == 0:
+            cold_s = row["s"]
+        best = row
+    best["cold_s"] = cold_s
+    rows.append(best)
+print("DEVICE_ROWS " + json.dumps(rows))
+"""
+
+
+def _device_rows(timeout: int = 1800):
+    """PR 9: the device-transport throughput rows, in a forced-host-device
+    subprocess (see the `device` regime note in the module docstring)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.pathsep.join([str(REPO / "src"), str(REPO)])
+    out = subprocess.run([sys.executable, "-c", _DEVICE_CODE], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"device bench subprocess failed:\n"
+                           f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}")
+    line = next(ln for ln in out.stdout.splitlines()
+                if ln.startswith("DEVICE_ROWS "))
+    return json.loads(line[len("DEVICE_ROWS "):])
+
+
 def main():
     print("  [async] building 50k 1%-delta workload (cold solve) ...")
     g, delta, base = _workload()
@@ -252,6 +319,14 @@ def main():
               f"overhead={row['overhead_vs_no_faults']}x "
               f"cert={row['cert']:.1e}")
 
+    print("  [async] device transport (PR 9): p=1 vs p=4, forced host "
+          "devices, warm wall-clock ...")
+    dev = _device_rows()
+    for row in dev:
+        print(f"    device    {'async':9s} p={row['p']} {row['s']:7.2f}s "
+              f"(cold {row['cold_s']:.2f}s) steps={row['supersteps']} "
+              f"cert={row['cert']:.1e} path={row['path']}")
+
     print("  [async] heterogeneous shards (rate/(1+i), p=4) ...")
     het = []
     rates = [DRAIN_RATE / (1 + i) for i in range(4)]
@@ -270,7 +345,10 @@ def main():
         drain_rate_pushes_per_s=DRAIN_RATE,
         cores=cores,
         raw=raw, drain_dominated=dom, drain_dominated_burn=burn,
-        heterogeneous=het, chaos=chaos,
+        heterogeneous=het, chaos=chaos, device=dev,
+        device_tol=TOL,
+        device_speedup_p4_vs_p1=round(
+            t(dev, "async", 1, "device") / t(dev, "async", 4, "device"), 3),
         chaos_recovery_s=next(r["recovery_s"] for r in chaos
                               if r["faults"] == "kill_drop_dup"),
         chaos_overhead_vs_no_faults=next(
@@ -296,6 +374,8 @@ def main():
         speedup_async_vs_superstep_hetero_p4=round(
             t(het, "superstep", 4) / t(het, "async", 4), 3),
     )
+    print(f"  [async] device p4-vs-p1 (warm wall-clock, forced host "
+          f"devices): {rec['device_speedup_p4_vs_p1']:.2f}x")
     print(f"  [async] drain-dominated p4-vs-p1 async: "
           f"{rec['speedup_p4_vs_p1_async']:.2f}x (sleep) | burn raw: "
           f"threads {rec['threads_burn_speedup_p4_vs_p1']:.2f}x vs "

@@ -1,0 +1,144 @@
+"""CI gate: the device shard transport's acceptance contract (PR 9).
+
+    python benchmarks/check_device_transport.py [BENCH_PR9.json] [--live]
+
+Default mode reads the ``async_shard.device`` rows of the given
+perf-trajectory file (default BENCH_PR9.json at the repo root) — the 50k
+power-law 1%-delta workload drained by ``transport="device"`` — and
+gates:
+
+  * both throughput rows are present (p=1 and p=4);
+  * every row drained in-loop (``path == "sharded_push"``, no solver
+    fallback) and its published host-side certificate holds
+    (``cert <= tol``);
+  * the recorded exchange bytes reproduce *exactly* from the row's own
+    (supersteps, rows_sent, fulls) counters through
+    ``runtime.step.comm_bytes_model`` — the one accounting model the
+    SPMD solver and the device transport share.  A mismatch means the
+    traced counters and the host-side model drifted apart.
+
+``--live`` additionally runs a fresh in-process p=4 device drain on a
+seeded 5k workload and applies the same gates to it.  The live pass
+needs 4 jax devices, so run it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the dedicated
+CI step does); without enough devices it fails loudly rather than
+skipping.
+
+Exit codes: 0 pass, 1 fail, 2 usage/missing section.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+
+def _check_rows(rows, tol, *, n, label):
+    from repro.runtime import comm_bytes_model
+
+    ok = True
+    for row in rows:
+        p = row["p"]
+        tag = f"{label} p={p}"
+        row_ok = True
+        if row["path"] != "sharded_push":
+            row_ok = False
+            print(f"FAIL path: {tag} fell back to {row['path']}")
+        if row["cert"] > tol:
+            row_ok = False
+            print(f"FAIL cert: {tag} cert={row['cert']:.2e} > "
+                  f"tol={tol:.0e}")
+        bsize = -(-n // p)
+        model = comm_bytes_model(
+            "sparsified", p=p, bsize=bsize, itemsize=8, nv=1,
+            steps=row["supersteps"], rows=row["rows_sent"],
+            fulls=row["fulls"])
+        if row["bytes_moved"] != model:
+            row_ok = False
+            print(f"FAIL bytes: {tag} recorded {row['bytes_moved']} != "
+                  f"model {model} (rows={row['rows_sent']}, "
+                  f"fulls={row['fulls']}, steps={row['supersteps']})")
+        if row_ok:
+            print(f"OK   {tag}: {row['s']}s steps={row['supersteps']} "
+                  f"cert={row['cert']:.1e} bytes={row['bytes_moved']}")
+        ok = ok and row_ok
+    return ok
+
+
+def _live_gate() -> bool:
+    """A fresh p=4 drain under the forced-device CI step: the in-loop
+    criterion must certify on this host, not just in the committed
+    BENCH rows."""
+    import time
+
+    import numpy as np
+
+    import jax
+    if len(jax.devices()) < 4:
+        print(f"FAIL live: need 4 devices, have {len(jax.devices())}; "
+              f"run under XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=4")
+        return False
+
+    from repro.graph.generate import powerlaw_webgraph
+    from repro.streaming import (DeltaGraph, EdgeDelta, cold_state,
+                                 update_ranks_sharded)
+
+    tol = 1e-8
+    n = 5000
+    g = powerlaw_webgraph(n=n, target_nnz=40_000, n_dangling=50, seed=3)
+    dg = DeltaGraph(g)
+    st = cold_state(dg, tol=tol)
+    rng = np.random.default_rng(7)
+    delta = EdgeDelta.inserts(rng.integers(0, n, 200),
+                              rng.integers(0, n, 200))
+    t0 = time.perf_counter()
+    st, stats = update_ranks_sharded(dg, delta, st, p=4, tol=tol,
+                                     mode="async", transport="device")
+    row = dict(mode="async", p=4, transport="device",
+               s=round(time.perf_counter() - t0, 3), path=stats.path,
+               supersteps=int(stats.supersteps),
+               rows_sent=int(stats.rows_sent), fulls=int(stats.fulls),
+               bytes_moved=int(stats.bytes_moved), cert=float(stats.cert))
+    return _check_rows([row], tol, n=n, label="live(5k)")
+
+
+def main() -> int:
+    argv = [a for a in sys.argv[1:] if a != "--live"]
+    live = "--live" in sys.argv[1:]
+    target = Path(argv[0]) if argv else REPO_ROOT / "BENCH_PR9.json"
+    if not target.is_absolute():
+        target = REPO_ROOT / target
+    if not target.exists():
+        print(f"device transport gate: {target.name} not found")
+        return 2
+    rec = json.loads(target.read_text())
+    arec = rec.get("async_shard", {})
+    rows = arec.get("device")
+    if not rows:
+        print(f"device transport gate: no async_shard.device rows in "
+              f"{target.name}")
+        return 2
+
+    ok = True
+    tol = arec.get("device_tol", 1e-8)
+    for p in (1, 4):
+        if not any(r["p"] == p for r in rows):
+            ok = False
+            print(f"FAIL rows: no device row at p={p} in {target.name}")
+    ok = _check_rows(rows, tol, n=50_000, label=target.name) and ok
+    if live:
+        ok = _live_gate() and ok
+
+    if not ok:
+        print("device transport failed its acceptance gates — see "
+              "docs/runtime.md 'Transports' and runtime/device.py for "
+              "the drain/exchange knobs")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,11 +6,12 @@ beyond-paper studies. Prints ``name,us_per_call,derived`` CSV at the end.
 Every run (including --quick) starts with the matvec-backend bench, the
 streaming-update bench, the sharded-runtime bench (sparsified vs
 allgather), the async-executor bench (async vs superstep shard
-drains, threads vs procpool transports), the observability bench
-(push-inflation attribution, chaos trace demo, zero-cost-when-off
-gate) and the drain-schedule bench (priority / boundary-batched /
-randomized inflation arms, PR 8) and writes the machine-readable
-perf-trajectory file (``--out``, default BENCH_PR8.json) at the repo
+drains, threads vs procpool vs the PR 9 device transport), the
+observability bench (push-inflation attribution, chaos trace demo,
+zero-cost-when-off gate) and the drain-schedule bench (priority /
+boundary-batched / randomized inflation arms, PR 8) and writes the
+machine-readable
+perf-trajectory file (``--out``, default BENCH_PR9.json) at the repo
 root; ``--tier1-seconds`` embeds the measured suite runtime for the
 check_tier1_runtime.py gate; --quick then skips the slow DES paper-table
 and SPMD staleness studies.
@@ -32,7 +33,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR8.json",
+    ap.add_argument("--out", default="BENCH_PR9.json",
                     help="perf-trajectory output (BENCH_PR<N>.json for "
                          "PR N; relative paths land at the repo root)")
     ap.add_argument("--tier1-seconds", default=None,
@@ -124,6 +125,13 @@ def main() -> None:
         f"threads_burn={arec['threads_burn_speedup_p4_vs_p1']:.2f}x,"
         f"raw_p4_vs_p1={arec['procpool_raw_speedup_p4_vs_p1']:.2f}x,"
         f"cores={arec['cores']}"))
+    dv4 = next(r for r in arec["device"] if r["p"] == 4)
+    csv_rows.append((
+        "device_shard",
+        f"{dv4['s'] * 1e6:.0f}",
+        f"p4_vs_p1={arec['device_speedup_p4_vs_p1']:.2f}x,"
+        f"steps={dv4['supersteps']},cert={dv4['cert']:.1e},"
+        f"path={dv4['path']},bytes={dv4['bytes_moved']}"))
     ck = next(r for r in arec["chaos"] if r["faults"] == "kill_drop_dup")
     csv_rows.append((
         "chaos_recovery",

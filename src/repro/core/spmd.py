@@ -67,6 +67,7 @@ from .partition import Partition, block_rows
 # submodule reference (see des.py): runtime.driver imports core.termination,
 # so its class attributes may not exist yet during an `import repro.runtime`
 from ..runtime import driver as _runtime_driver
+from ..runtime import step as _runtime_step
 from ..runtime import transport as _runtime_transport
 from ..runtime.exchange import spmd_exchange
 from ..graph.google import GoogleOperator
@@ -138,18 +139,9 @@ class SPMDResult:
     chunk_log: Optional[List[dict]] = None
 
 
-def _hash_uniform(seed: int, step: jax.Array, lane: jax.Array) -> jax.Array:
-    """Counter-based uniform in [0, 1): a SplitMix-style integer mix of
-    (seed, superstep, shard). jax.random inside shard_map lowers to a
-    PartitionId instruction XLA's SPMD partitioner rejects; this hash is
-    deterministic, partitionable, and plenty for a drop model."""
-    z = (step.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
-         + lane.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
-         + jnp.uint32(seed & 0xFFFFFFFF))
-    z = (z ^ (z >> 16)) * jnp.uint32(0x7FEB352D)
-    z = (z ^ (z >> 15)) * jnp.uint32(0x846CA68B)
-    z = z ^ (z >> 16)
-    return z.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+# the accept-draw hash moved to the shared step module; kept under the
+# historic name for the kernel/SPMD tests that pin its distribution
+_hash_uniform = _runtime_step.hash_uniform
 
 
 def _resolve_bsr(cfg: SPMDConfig) -> Tuple[int, str]:
@@ -377,93 +369,37 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
         def body_fn(vblk, valid, dang, x0, *op_args):
             """Runs on one shard. vblk/x0: (1, bsize, nv), valid:
             (1, bsize), dang: (1, n_pad); op_args are the shard's
-            operator slice (edge or block form)."""
+            operator slice (edge or block form).
+
+            The body is assembled from the shared ShardStep builders
+            (runtime/step.py) — the same traced step the device
+            transport runs, so the bulk-synchronous solver and the async
+            streaming drain share one local update / exchange /
+            termination body."""
             vb_, val_, dg_, myx = vblk[0], valid[0], dang[0], x0[0]
             i = jax.lax.axis_index("ue")
 
+            op_slice = tuple(a[0] for a in op_args)
             if use_bsr:
-                from ..kernels.bsr_spmv import bsr_matvec
-                blk_, bcols_, hrow_, hcol_, hval_ = (a[0] for a in op_args)
-
-                def pt_apply(view):
-                    xb = view.astype(jnp.float32).reshape(
-                        n_pad // bm, bm, nv_c)
-                    y = bsr_matvec(blk_, bcols_, xb, impl=bsr_impl)
-                    hub = jax.ops.segment_sum(
-                        hval_[:, None] * view.astype(jnp.float32)[hcol_],
-                        hrow_, num_segments=bsize)
-                    return (y.reshape(bsize, nv_c) + hub).astype(view.dtype)
+                pt_apply = _runtime_step.shard_pt_apply(
+                    op_slice, use_bsr=True, bsize=bsize, nv=nv_c,
+                    n_pad=n_pad, bm=bm, impl=bsr_impl)
             else:
-                src_, wgt_, rid_ = (a[0] for a in op_args)
+                pt_apply = _runtime_step.shard_pt_apply(
+                    op_slice, use_bsr=False, bsize=bsize, nv=nv_c)
+            local_update = _runtime_step.shard_local_update(
+                pt_apply, alpha=alpha, linear=linear, n=n,
+                vb=vb_, val=val_, dang=dg_)
+            superstep, cond = _runtime_step.shard_superstep_fns(
+                local_update, comm, i=i, p=p, tol=tol,
+                pc_max_compute=cfg.pc_max_compute,
+                pc_max_monitor=cfg.pc_max_monitor,
+                seed=seed, q=q, freeze_lanes=cfg.freeze_lanes,
+                max_steps=max_steps, compact_exit=compact_exit,
+                exit_k=exit_k, conv="linf", axis="ue")
 
-                def pt_apply(view):
-                    contrib = wgt_[:, None] * view[src_]
-                    return jax.ops.segment_sum(contrib, rid_,
-                                               num_segments=bsize)
-
-            def local_update(view):
-                """f_i: new own fragment from the (stale) full view — per
-                lane.  The scalar dangling/teleport corrections are masked
-                so the block-aligned padding rows stay exactly zero."""
-                y = alpha * pt_apply(view)
-                dmass = jnp.sum(jnp.where(dg_[:, None], view, 0.0), axis=0)
-                y = y + alpha * dmass[None, :] / n * val_[:, None]
-                if linear:
-                    y = y + (1.0 - alpha) * vb_
-                else:
-                    y = y + (1.0 - alpha) * jnp.sum(view, axis=0)[None, :] \
-                        * vb_
-                return y * val_[:, None]
-
-            def superstep(carry):
-                (view, frag, comm_state, step, pc, mon_pc, lane_done,
-                 lane_step, rows_sent, fulls) = carry
-                newfrag = local_update(view)
-                if cfg.freeze_lanes:
-                    # frozen lanes keep their fragment — the monitor
-                    # already observed persistent global convergence
-                    newfrag = jnp.where(lane_done[None, :], frag, newfrag)
-                resid = jnp.max(jnp.abs(newfrag - frag), axis=0)  # (nv_c,)
-
-                # ---- communication (ExchangePlan, bulk-sync) -------------
-                accept = _hash_uniform(seed, step, i) < q
-                view, comm_state, nsent, nfull = comm(
-                    i, view, newfrag, comm_state, step, accept)
-
-                # ---- in-loop Fig. 1 protocol (all-reduced bits) ----------
-                # the reduction channel comes from the transport layer:
-                # the mesh psum is the bulk-synchronous rendering of the
-                # same seam the host drivers reduce through
-                pc, mon_pc, done_now = \
-                    _runtime_driver.TerminationDriver.bits_step(
-                        resid < tol, pc, mon_pc, p=p,
-                        pc_max_compute=cfg.pc_max_compute,
-                        pc_max_monitor=cfg.pc_max_monitor,
-                        psum=_runtime_transport.mesh_psum("ue"))
-                lane_step = jnp.where(done_now & (lane_step < 0),
-                                      step + 1, lane_step)
-                return (view, newfrag, comm_state, step + 1, pc, mon_pc,
-                        done_now, lane_step, rows_sent + nsent,
-                        fulls + nfull)
-
-            def cond(carry):
-                _, _, _, step, _, _, lane_done, *_ = carry
-                keep = jnp.logical_and(~jnp.all(lane_done),
-                                       step < max_steps)
-                if compact_exit:
-                    # the pow2-compaction hook: once exit_k lanes are
-                    # frozen, hand control back to the host so the
-                    # stack can shrink instead of masking dead lanes
-                    keep = jnp.logical_and(
-                        keep,
-                        jnp.sum(lane_done.astype(jnp.int32)) < exit_k)
-                return keep
-
-            view0 = jax.lax.all_gather(myx, "ue").reshape(n_pad, nv_c)
-            carry = (view0, myx, init_comm(myx), jnp.asarray(0),
-                     jnp.zeros(nv_c, jnp.int32), jnp.zeros(nv_c, jnp.int32),
-                     jnp.zeros(nv_c, bool), jnp.full(nv_c, -1, jnp.int32),
-                     jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+            carry = _runtime_step.init_carry(myx, init_comm, nv=nv_c,
+                                             n_pad=n_pad, axis="ue")
             (view, frag, _, step, pc, mon_pc, lane_done, lane_step,
              rows_sent, fulls) = jax.lax.while_loop(
                 cond, lambda c: superstep(c), carry)
@@ -491,21 +427,14 @@ def solve_spmd(op: GoogleOperator, cfg: SPMDConfig,
     def chunk_bytes(nv_c, steps_c, rows_c, fulls_c):
         """The per-chunk rendering of the byte model (the static schedules
         scale with the chunk's lane count; sparsified uses the honest
-        in-loop counters)."""
-        frag_bytes = bsize * np.dtype(cfg.dtype).itemsize
-        if cfg.schedule == "ring":
-            return p * frag_bytes * nv_c * steps_c
-        if cfg.schedule == "allgather_k":
-            return (p * (p - 1) * frag_bytes * nv_c
-                    // cfg.sync_every) * steps_c
-        if cfg.schedule == "sparsified":
-            # (idx, value-lanes) pairs to p-1 peers per sparse payload
-            # row, plus the forced full refreshes (each due step is one
-            # full all-gather)
-            entry = 4 + np.dtype(cfg.dtype).itemsize * nv_c
-            return (rows_c * (p - 1) * entry
-                    + fulls_c * (p - 1) * frag_bytes * nv_c)
-        return p * (p - 1) * frag_bytes * nv_c * steps_c
+        in-loop counters).  Delegates to the one shared model in
+        runtime/step.py — the device transport and its bench gate report
+        through the identical accounting."""
+        return _runtime_step.comm_bytes_model(
+            cfg.schedule, p=p, bsize=bsize,
+            itemsize=np.dtype(cfg.dtype).itemsize, nv=nv_c,
+            steps=steps_c, rows=rows_c, fulls=fulls_c,
+            sync_every=cfg.sync_every)
 
     compact = bool(cfg.compact_lanes and cfg.freeze_lanes and nv > 1)
     vblk_full = packed["vblk"]

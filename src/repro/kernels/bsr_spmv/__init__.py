@@ -1,5 +1,5 @@
 from .ops import (BSRMatrix, HybridBSR, build_bsr, build_hybrid_bsr,
                   bsr_from_transition, hybrid_from_transition, pad_x,
-                  unpad_y, spmv, bsr_matvec, hybrid_matvec)
+                  unpad_y, spmv, bsr_matvec, hybrid_matvec, resolve_impl)
 from .bsr_spmv import bsr_spmv, DEFAULT_BM, DEFAULT_BN
 from .ref import bsr_spmv_ref

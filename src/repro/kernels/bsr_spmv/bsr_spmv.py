@@ -47,26 +47,60 @@ def _kernel(blk_cols_ref, blocks_ref, x_ref, o_ref):
                         ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kernel_kahan(blk_cols_ref, blocks_ref, x_ref, o_ref, c_ref):
+    """Compensated (Kahan) accumulation over the K inner slots.
+
+    The f32 MXU products carry a per-element running compensation term in a
+    VMEM scratch block that persists across the K grid steps revisiting this
+    output block, so the K-term summation error drops from O(K * eps) to
+    O(eps) — the accumulation-noise half of the f32 residual floor.  (The
+    other half, the f32 *representation* of blocks and x, is unchanged: ask
+    the ref/einsum lane with accum="f64" for genuinely tighter arithmetic.)
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    blk = blocks_ref[0, 0]          # (bm, bn)
+    xb = x_ref[0]                   # (bn, nv)
+    prod = jnp.dot(blk, xb, preferred_element_type=jnp.float32)
+    y = prod - c_ref[...]
+    t = o_ref[0] + y
+    c_ref[...] = (t - o_ref[0]) - y
+    o_ref[0] = t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "accum"))
 def bsr_spmv(blocks: jax.Array, blk_cols: jax.Array, x: jax.Array,
-             interpret: bool = False) -> jax.Array:
+             interpret: bool = False, accum: str = "f32") -> jax.Array:
     """y[i] = sum_k blocks[i, k] @ x[blk_cols[i, k]].
 
     blocks:   (nbr, K, bm, bn)
     blk_cols: (nbr, K) int32 — zero-padded slots MUST point at a valid block
               column (use 0) with an all-zero data block.
     x:        (nbc, bn, nv)
+    accum:    "f32" (plain f32 accumulate, the MXU default) or "kahan"
+              (compensated summation across the K slots — the tight-residual
+              lane for relaxed-tolerance async device runs).
     returns   (nbr, bm, nv) float32
     """
+    if accum not in ("f32", "kahan"):
+        raise ValueError(f"unknown accum {accum!r}; the kernel renders "
+                         "'f32' or 'kahan' (f64 accumulate is the ref lane)")
     nbr, K, bm, bn = blocks.shape
     nbc, bn2, nv = x.shape
     assert bn == bn2, (bn, bn2)
 
     grid = (nbr, K)
     out_shape = jax.ShapeDtypeStruct((nbr, bm, nv), jnp.float32)
+    kernel = _kernel if accum == "f32" else _kernel_kahan
+    scratch = [] if accum == "f32" else [pltpu.VMEM((bm, nv), jnp.float32)]
 
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
@@ -75,6 +109,7 @@ def bsr_spmv(blocks: jax.Array, blk_cols: jax.Array, x: jax.Array,
                 pl.BlockSpec((1, bn, nv), lambda i, k, cols: (cols[i, k], 0, 0)),
             ],
             out_specs=pl.BlockSpec((1, bm, nv), lambda i, k, cols: (i, 0, 0)),
+            scratch_shapes=scratch,
         ),
         out_shape=out_shape,
         interpret=interpret,

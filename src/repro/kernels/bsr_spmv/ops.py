@@ -254,36 +254,83 @@ def unpad_y(y: np.ndarray, n_rows: int) -> np.ndarray:
     return y.reshape(nbr * bm, nv)[:n_rows]
 
 
+IMPLS = ("auto", "pallas", "interpret", "ref")
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Kernel-dispatch policy: "auto" picks the compiled Pallas kernel on a
+    real TPU/GPU and interpret mode elsewhere (the faithful kernel
+    semantics on hosts with no Mosaic backend); an explicit impl is passed
+    through untouched — the kernel tests' override.  (The *solver* policy,
+    which prefers the fast blocked-einsum oracle on CPU, lives in
+    core.backend.BackendSpec.resolved() — same math, different speed
+    trade.)"""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() in ("tpu", "gpu") \
+        else "interpret"
+
+
 def bsr_matvec(blocks: jax.Array, blk_cols: jax.Array, x: jax.Array,
-               impl: str = "ref") -> jax.Array:
+               impl: str = "auto", accum: str = "f32") -> jax.Array:
     """Dispatch the block multiply: Pallas kernel, interpret mode, or the
-    jnp blocked-einsum oracle (same math, XLA-compiled — the CPU path)."""
+    jnp blocked-einsum oracle (same math, XLA-compiled — the CPU path).
+    impl="auto" resolves via `resolve_impl` (pallas on real TPU/GPU,
+    interpret elsewhere).  `accum` selects the accumulation lane: "f32"
+    (default), "kahan" (compensated summation — on the kernel paths a
+    scratch-carried Kahan sum, on the ref path the f64-accumulate limit
+    cast back to f32), or "f64" (ref path only: full f64 accumulate,
+    result in x's dtype; the kernel paths render it as "kahan" — the MXU
+    has no f64)."""
+    impl = resolve_impl(impl)
     if impl == "pallas":
-        return bsr_spmv(blocks, blk_cols, x, interpret=False)
+        return bsr_spmv(blocks, blk_cols, x, interpret=False,
+                        accum="f32" if accum == "f32" else "kahan")
     if impl == "interpret":
-        return bsr_spmv(blocks, blk_cols, x, interpret=True)
-    return bsr_spmv_ref(blocks, blk_cols, x)
+        return bsr_spmv(blocks, blk_cols, x, interpret=True,
+                        accum="f32" if accum == "f32" else "kahan")
+    return bsr_spmv_ref(blocks, blk_cols, x, accum=accum)
 
 
-def hybrid_matvec(dev: dict, x: jax.Array, impl: str = "ref") -> jax.Array:
+def hybrid_matvec(dev: dict, x: jax.Array, impl: str = "ref",
+                  accum: str = "f32") -> jax.Array:
     """y = PT @ x in the padded block layout for a HybridBSR device dict.
 
     x: (nbc, bn, nv) -> y: (nbr, bm, nv). The hub COO side is a gather +
-    segment-sum over the padded row space, fused into the same jit scope.
+    segment-sum over the padded row space, fused into the same jit scope
+    (accumulated in the same lane as the block side: f64 when accum
+    requests it and x64 is live).
     """
-    y = bsr_matvec(dev["blocks"], dev["blk_cols"], x, impl=impl)
+    y = bsr_matvec(dev["blocks"], dev["blk_cols"], x, impl=impl,
+                   accum=accum)
     nbr, bm, nv = y.shape
     xf = x.reshape(-1, nv)
-    contrib = dev["hub_vals"][:, None] * xf[dev["hub_cols"]]
+    if accum == "f32":
+        contrib = dev["hub_vals"][:, None] * xf[dev["hub_cols"]]
+    else:
+        wide = jax.dtypes.canonicalize_dtype(jnp.float64)
+        contrib = (dev["hub_vals"].astype(wide)[:, None]
+                   * xf.astype(wide)[dev["hub_cols"]])
     hub = jax.ops.segment_sum(contrib, dev["hub_rows"],
                               num_segments=nbr * bm)
     return y + hub.reshape(nbr, bm, nv).astype(y.dtype)
 
 
 def spmv(bsr: BSRMatrix, x: jax.Array, interpret: bool = False,
-         use_ref: bool = False) -> jax.Array:
-    """y = PT @ x in the padded block layout (device arrays in/out)."""
+         use_ref: bool = False, impl: Optional[str] = None,
+         accum: str = "f32") -> jax.Array:
+    """y = PT @ x in the padded block layout (device arrays in/out).
+
+    The historic boolean knobs (`interpret`/`use_ref`) are kept as the
+    kernel tests' explicit override; pass `impl=` ("auto"/"pallas"/
+    "interpret"/"ref") to go through the auto-detecting dispatch instead.
+    """
     blocks, blk_cols = bsr.device()
+    if impl is not None:
+        return bsr_matvec(blocks, blk_cols, x, impl=impl, accum=accum)
     if use_ref:
-        return bsr_spmv_ref(blocks, blk_cols, x)
-    return bsr_spmv(blocks, blk_cols, x, interpret=interpret)
+        return bsr_spmv_ref(blocks, blk_cols, x, accum=accum)
+    return bsr_spmv(blocks, blk_cols, x, interpret=interpret,
+                    accum="f32" if accum == "f32" else "kahan")

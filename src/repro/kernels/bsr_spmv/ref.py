@@ -14,10 +14,32 @@ import jax.numpy as jnp
 
 
 def bsr_spmv_ref(blocks: jnp.ndarray, blk_cols: jnp.ndarray,
-                 x: jnp.ndarray) -> jnp.ndarray:
+                 x: jnp.ndarray, accum: str = "f32") -> jnp.ndarray:
+    """accum selects the accumulation lane of the contraction:
+
+      "f32"   — f32 accumulate (bitwise the historic oracle).
+      "f64"   — inputs upcast, contraction accumulated in float64, result
+                returned in x's dtype (float64 under enable_x64): the
+                segment-sum-grade reference the compensated kernel lane is
+                equivalence-tested against.
+      "kahan" — the compensated-summation *limit*: f64 accumulate cast back
+                to float32 (what an exactly-compensated f32 sum converges
+                to; the Pallas kernel's accum="kahan" approximates this).
+    """
     nbr, K, bm, bn = blocks.shape
     # gather the x block for every (row, k): (nbr, K, bn, nv)
     xg = x[blk_cols]
-    # (nbr, K, bm, bn) @ (nbr, K, bn, nv) -> sum over K -> (nbr, bm, nv)
-    return jnp.einsum("rkmn,rknv->rmv", blocks, xg,
-                      preferred_element_type=jnp.float32)
+    if accum == "f32":
+        # (nbr, K, bm, bn) @ (nbr, K, bn, nv) -> sum over K -> (nbr, bm, nv)
+        return jnp.einsum("rkmn,rknv->rmv", blocks, xg,
+                          preferred_element_type=jnp.float32)
+    if accum not in ("f64", "kahan"):
+        raise ValueError(f"unknown accum {accum!r}; expected 'f32', "
+                         "'f64' or 'kahan'")
+    import jax
+    # canonicalize: float64 with x64 live, a silent float32 degrade (no
+    # warning spam) when the caller never enabled it
+    wide = jax.dtypes.canonicalize_dtype(jnp.float64)
+    y = jnp.einsum("rkmn,rknv->rmv", blocks.astype(wide), xg.astype(wide),
+                   preferred_element_type=wide)
+    return y.astype(jnp.float32 if accum == "kahan" else x.dtype)

@@ -21,10 +21,21 @@ three substrates that used to hand-roll it (`core.des`, `core.spmd`,
              and all-reduced-bit renderings.
   transport— the transport-agnostic shard-worker layer: the per-shard
              cycle (`shard_worker_loop`) written once against the
-             `TransportContext`/`Channel` seam, with two renderings —
+             `TransportContext`/`Channel` seam, with two host renderings —
              threads (PairMailbox accumulators, driver lock) and procpool
              (worker processes over a ShardArena, mailboxes and Fig. 1
              messages on lock-free shared rings).
+  step     — ShardStep: the cycle one level deeper, as a per-shard step —
+             `HostShardStep` (the worker-loop round, verbatim) plus the
+             jax-traceable builders (`shard_pt_apply` /
+             `shard_local_update` / `shard_superstep_fns`) that core.spmd
+             and the device transport assemble into one traced body, and
+             `comm_bytes_model`, the shared exchange byte accounting.
+  device   — DeviceShardTransport: the third transport rendering — p
+             shard programs over a `ue` device mesh running the traced
+             ShardStep (Pallas BSR or segment-sum drain, collective
+             exchange, all-reduced Fig. 1 bits), float64 end-to-end for
+             1e-8 certificates.
   executor — AsyncShardExecutor: the thread rendering's public face — one
              thread per shard, per-pair boundary-residual mailboxes (no
              superstep barrier), ExchangePlan consulted per local update,
@@ -67,6 +78,9 @@ from .transport import (Channel, HostAllReduce, ProcPoolShardExecutor,
                         ReductionChannel, ShmRing, ThreadedShardTransport,
                         TransportContext, WorkerConfig, default_pool_size,
                         mesh_psum, shard_worker_loop)
+from .step import (HostShardStep, comm_bytes_model, shard_local_update,
+                   shard_pt_apply, shard_superstep_fns)
+from .device import DeviceRunResult, DeviceShardTransport
 from .executor import (AsyncRunResult, AsyncShardExecutor, PairMailbox,
                        UniformAccumulator)
 
@@ -85,6 +99,9 @@ __all__ = [
     "Channel", "TransportContext", "WorkerConfig", "shard_worker_loop",
     "ThreadedShardTransport", "ProcPoolShardExecutor", "ShmRing",
     "default_pool_size", "ReductionChannel", "HostAllReduce", "mesh_psum",
+    "HostShardStep", "shard_pt_apply", "shard_local_update",
+    "shard_superstep_fns", "comm_bytes_model",
+    "DeviceShardTransport", "DeviceRunResult",
     "AsyncRunResult", "AsyncShardExecutor", "PairMailbox",
     "UniformAccumulator",
 ]

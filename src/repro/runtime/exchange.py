@@ -282,7 +282,11 @@ def spmd_exchange(schedule: str, *, p: int, bsize: int, n_pad: int,
     one = jnp.asarray(1, dtype=jnp.int32)
 
     def place_own(view, newfrag, i):
-        return jax.lax.dynamic_update_slice(view, newfrag, (i * bsize, 0))
+        # both indices pinned to int32: under enable_x64 (the device
+        # transport) a bare 0 literal canonicalizes to int64 and
+        # dynamic_update_slice rejects the mixed-dtype index tuple
+        return jax.lax.dynamic_update_slice(
+            view, newfrag, ((i * bsize).astype(jnp.int32), zero))
 
     if schedule == "allgather":
         def init_state(myfrag):
@@ -327,7 +331,7 @@ def spmd_exchange(schedule: str, *, p: int, bsize: int, n_pad: int,
             # my own slot must always hold the fresh fragment
             view = place_own(view, newfrag, i)
             updated = jax.lax.dynamic_update_slice(
-                view, ring_in, (owner * bsize, 0))
+                view, ring_in, ((owner * bsize).astype(jnp.int32), zero))
             view = jnp.where(
                 jnp.logical_and(accept, owner != i), updated, view)
             # forward own fragment afresh every p steps, else relay

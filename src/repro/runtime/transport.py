@@ -453,245 +453,21 @@ def shard_worker_loop(i: int, r: np.ndarray, part: Partition,
     verdict flips / STOP / caps) plus the per-shard counter slots.  The
     default None is the zero-cost path — every hook is one predictable
     branch.
+
+    The round body itself lives in `step.HostShardStep` — the host
+    rendering of the per-shard ShardStep (the jax-traceable rendering of
+    the same cycle drives `core.spmd` and the device transport, see
+    runtime/step.py).  This function is the thin host driver: construct
+    the step, spin rounds until an exit path fires, record telemetry.
     """
-    p = part.p
-    s, e = part.block(i)
-    bs = e - s
-    n = part.n
-    conv_target = cfg.l1_target * (bs / n) if n else cfg.l1_target
-    drain_floor = 0.5 * conv_target
-    outbox = ctx.outbox(i)
-    peers = [d for d in range(p) if d != i]
-    # boundary-batched DrainSchedule: pair shipments coalesce behind this
-    # gate (None for every other schedule — the zero-cost default)
-    gate = cfg.schedule.gate(p)
-    # cached L1s of the two O(n) structures this worker owns — only
-    # intake/drain/exchange can change them, so idle rounds cost O(p)
-    # instead of O(n)
-    own_l1 = float(np.abs(r[s:e]).sum())
-    # a restarted worker can inherit a non-empty outbox (plan-withheld or
-    # backpressured mass from the dead incarnation) — seed the cache from
-    # the structure itself, never assume empty
-    outbox_l1 = float(np.abs(outbox).sum())
-    own_dirty = outbox_dirty = False
-    it = 0            # raw rounds (spin included): caps, telemetry
-    updates = 0       # *local updates*: the ExchangePlan's clock
-    tick_pending = False
-    idle_total = 0.0
-    prev_verdict: Optional[bool] = None   # Fig. 1 flip edge detector
+    from .step import HostShardStep
+    step = HostShardStep(i, r, part, plan, cfg, ctx, drain_fn, obs)
     try:
-        while True:
-            if ctx.stopped():
-                # the other clean exit: a peer's report chain stamped the
-                # global STOP and this shard observed it at the loop top —
-                # trace it so every shard's stream ends in exactly one
-                # STOP (the report()-True path below emits its own)
-                if obs is not None:
-                    obs.ctr[i, C_STOPS] += 1
-                    obs.emit(EV_STOP, i, obs.now(), gen=updates,
-                             a=float(it))
-                break
-            if it >= cfg.max_rounds:
-                if obs is not None:
-                    obs.ctr[i, C_CAPPED] += 1
-                    obs.emit(EV_CAPPED, i, obs.now(), gen=updates,
-                             a=float(it))
-                ctx.note_capped()
-                break
-            it += 1
-            progressed = False
-
-            # -- receive: fold incoming mail + my uniform share.  A
-            #    nonzero intake RETRACTS convergence before the mass
-            #    leaves the sender's books: once drained, the sender's
-            #    next value read no longer sees it, and this shard's own
-            #    report only happens at round end — without the
-            #    retraction, STOP could ride this shard's stale CONVERGE
-            #    flag while a whole exchange generation sits uncounted in
-            #    its rows. ----------------------------------------------
-            if ctx.intake_ready(i):
-                t_ev = obs.now() if obs is not None else 0.0
-                ctx.retract(i)
-                if ctx.fold_intake(i, r, s, e):
-                    progressed = True
-                    own_dirty = True
-                if obs is not None:
-                    obs.ctr[i, C_INTAKES] += 1
-                    obs.emit(EV_INTAKE, i, t_ev, dur=obs.now() - t_ev,
-                             gen=updates, a=float(progressed))
-
-            # -- local update: drain own rows to a sliding target.  The
-            #    drain is gated by a hysteresis band: entering the
-            #    coarse-to-fine ladder for every trickling arrival pushes
-            #    near-floor rows over and over (the superstep loop
-            #    batches a whole exchange generation per ladder), so
-            #    arrivals accumulate until own mass meaningfully exceeds
-            #    the sliding target.  At the floor the band collapses —
-            #    parked mass stays at <= drain_floor = conv_target/2,
-            #    which keeps the convergence check reachable. ------------
-            approx_total = ctx.values_total()
-            step_target = max(drain_floor,
-                              cfg.drain_frac * approx_total / p)
-            if own_dirty:
-                own_l1 = float(np.abs(r[s:e]).sum())
-                own_dirty = False
-            did_drain = False
-            if own_l1 > (cfg.hysteresis * step_target
-                         if step_target > drain_floor else drain_floor):
-                if obs is None:
-                    got, c_add = drain_fn(i, s, e, step_target, outbox)
-                else:
-                    t_ev = obs.now()
-                    a0 = (obs.attr[i].copy()
-                          if obs.attr is not None else None)
-                    got, c_add = drain_fn(i, s, e, step_target, outbox)
-                    dt_ev = obs.now() - t_ev
-                    da_local = da_boundary = 0.0
-                    if a0 is not None:
-                        da = obs.attr[i] - a0
-                        da_local, da_boundary = float(da[1]), float(da[2])
-                    obs.ctr[i, C_DRAINS] += 1
-                    obs.ctr[i, C_DRAIN_ROWS] += got
-                    obs.ctr[i, C_DRAIN_MASS] += max(own_l1 - step_target,
-                                                    0.0)
-                    obs.observe_drain_s(i, dt_ev)
-                    obs.emit(EV_DRAIN, i, t_ev, dur=dt_ev, gen=updates,
-                             a=float(got), b=own_l1, c=da_local,
-                             d=da_boundary)
-                ctx.uniform_add(i, c_add)
-                own_dirty = outbox_dirty = True
-                did_drain = True
-                if got:
-                    ctx.add_pushes(i, got)
-                    progressed = True
-            if (cfg.max_total_pushes is not None
-                    and ctx.total_pushes() > cfg.max_total_pushes):
-                if obs is not None:
-                    obs.ctr[i, C_CAPPED] += 1
-                    obs.emit(EV_CAPPED, i, obs.now(), gen=updates,
-                             a=float(it))
-                ctx.note_capped()
-                break
-
-            # -- exchange: plan consulted per *local update*, not per
-            #    spin round — idle-converged rounds must not tick the §6
-            #    refresh clock.  A blocked-but-unconverged round
-            #    (tick_pending, set below) still ticks: mass parked above
-            #    the convergence target keeps the bounded-delay escape
-            #    hatch live. --------------------------------------------
-            if did_drain or tick_pending:
-                updates += 1
-                tick_pending = False
-                if outbox_dirty:
-                    outbox_l1 = float(np.abs(outbox).sum())
-                    outbox_dirty = False
-                for d in peers:
-                    if not plan.wants(i, d, updates):
-                        continue
-                    if outbox_l1 == 0.0:
-                        # nothing pending anywhere: the receiver's copy
-                        # already reflects everything this shard
-                        # produced, so the epoch counts as a (zero-byte)
-                        # refresh — quiet pairs must not bank
-                        # forced-refresh debt
-                        plan.note_sent(i, d, updates)
-                        if gate is not None:
-                            gate.note_quiet(d, updates)
-                        continue
-                    sd, ed = part.block(d)
-                    box = outbox[sd:ed]
-                    mass = float(np.abs(box).sum())
-                    if mass == 0.0:
-                        plan.note_sent(i, d, updates)
-                        if gate is not None:
-                            gate.note_quiet(d, updates)
-                        continue
-                    if gate is not None and not gate.ready(
-                            d, updates, mass, step_target):
-                        # boundary-batched: the pair's mass keeps folding
-                        # in the outbox (still counted in this shard's
-                        # value) until the batch window expires or the
-                        # coalesced payload is worth a generation
-                        continue
-                    if not plan.gate_mass(i, d, updates, mass):
-                        continue
-                    t_ev = obs.now() if obs is not None else 0.0
-                    nz = ctx.send(i, d, box)
-                    if nz < 0:
-                        # channel backpressure (a full procpool ring):
-                        # the mass stays in the outbox — still counted in
-                        # this shard's value — and ships on a later
-                        # update
-                        continue
-                    if obs is not None:
-                        nbytes = nz * (4 + cfg.bytes_per_entry)
-                        obs.ctr[i, C_EXCHANGES] += 1
-                        obs.ctr[i, C_EXCHANGE_ROWS] += nz
-                        obs.ctr[i, C_EXCHANGE_BYTES] += nbytes
-                        obs.emit(EV_EXCHANGE, i, t_ev,
-                                 dur=obs.now() - t_ev, gen=updates,
-                                 a=float(d), b=float(nz), c=float(nbytes))
-                    outbox_dirty = True
-                    plan.note_sent(i, d, updates)
-                    plan.on_result(i, d, True)
-                    if gate is not None:
-                        gate.note_sent(d, updates)
-                    ctx.note_exchange(i, nz)
-                    progressed = True
-
-            # -- my residual value: everything I am accountable for
-            #    right now (the conservation invariant): own rows,
-            #    undelivered outbox, channel mass *I* put in flight, and
-            #    my rows' share of the pending uniform.  In-flight mass
-            #    is counted by the SENDER — it only leaves my books when
-            #    the receiver has folded it into rows the receiver
-            #    itself counts, so a deposit can never go unreported at
-            #    the instant the monitor evaluates STOP (the transient
-            #    double-count while the receiver drains is sound: it can
-            #    only delay convergence, never fake it) ------------------
-            if own_dirty:
-                own_l1 = float(np.abs(r[s:e]).sum())
-                own_dirty = False
-            if outbox_dirty:
-                outbox_l1 = float(np.abs(outbox).sum())
-                outbox_dirty = False
-            value = (own_l1 + outbox_l1
-                     + abs(ctx.uniform_pending(i)) * bs
-                     + ctx.inflight_l1(i))
-            ctx.publish_value(i, value)
-
-            # -- Fig. 1, message rendering ------------------------------
-            verdict = value <= conv_target
-            if obs is not None and verdict != prev_verdict:
-                if verdict:
-                    obs.ctr[i, C_CONVERGES] += 1
-                    obs.emit(EV_CONVERGE, i, obs.now(), gen=updates,
-                             a=value)
-                else:
-                    obs.ctr[i, C_DIVERGES] += 1
-                    obs.emit(EV_DIVERGE, i, obs.now(), gen=updates,
-                             a=value)
-                prev_verdict = verdict
-            if ctx.report(i, verdict, it):
-                if obs is not None:
-                    obs.ctr[i, C_STOPS] += 1
-                    obs.emit(EV_STOP, i, obs.now(), gen=updates,
-                             a=float(it))
-                break
-            if not verdict and not progressed:
-                # parked above target with the plan withholding: count
-                # the next round as a local update so the forced refresh
-                # can fire (no livelock)
-                tick_pending = True
-
-            # -- idle backoff: park until mail can have arrived ---------
-            if not progressed:
-                t_idle = time.perf_counter()
-                ctx.idle_wait(cfg.idle_sleep)
-                idle_total += time.perf_counter() - t_idle
+        while step.round():
+            pass
     finally:
-        ctx.record_rounds(i, it)
-        ctx.record_idle(i, idle_total)
+        ctx.record_rounds(i, step.it)
+        ctx.record_idle(i, step.idle_total)
 
 
 # ---------------------------------------------------------------------------

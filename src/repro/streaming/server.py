@@ -100,12 +100,13 @@ class RankServer:
         if shard_mode not in ("superstep", "async"):
             raise ValueError(f"unknown shard_mode {shard_mode!r}; expected "
                              "'superstep' or 'async'")
-        if shard_transport not in ("threads", "procpool"):
+        if shard_transport not in ("threads", "procpool", "device"):
             raise ValueError(f"unknown shard_transport {shard_transport!r};"
-                             " expected 'threads' or 'procpool'")
-        if shard_transport == "procpool" and shard_mode != "async":
-            raise ValueError("shard_transport='procpool' requires "
-                             "shard_mode='async'")
+                             " expected 'threads', 'procpool' or 'device'")
+        if shard_transport in ("procpool", "device") \
+                and shard_mode != "async":
+            raise ValueError(f"shard_transport={shard_transport!r} "
+                             "requires shard_mode='async'")
         self.dg = dg
         self.alpha = alpha
         self.tol = tol
@@ -118,9 +119,10 @@ class RankServer:
         # boundary residual under `exchange` ("allgather" | "sparsified"),
         # certificate via the Fig. 1 TerminationDriver.  shard_mode="async"
         # runs the drains with no superstep barrier on `shard_transport`:
-        # "threads" (AsyncShardExecutor worker threads) or "procpool"
+        # "threads" (AsyncShardExecutor worker threads), "procpool"
         # (worker processes over a shared-memory ShardArena,
-        # `shard_workers` sizing the pool; see docs/runtime.md).
+        # `shard_workers` sizing the pool), or "device" (p jax shard
+        # programs over a device mesh; see docs/runtime.md).
         self.updater = updater
         self.shards = shards
         self.exchange = exchange

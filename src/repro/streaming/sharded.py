@@ -98,6 +98,11 @@ class ShardedUpdateStats:
     pushes_local: int = 0      # re-pushes from the shard's own sweep order
     pushes_boundary: int = 0   # re-pushes re-activated by foreign mass
     observed: Optional[dict] = None  # ShardObserver.observed() payload
+    # device transport only: the §6 sparsified collective counters
+    rows_sent: int = 0         # sparse payload rows shipped in-loop
+    fulls: int = 0             # forced full refreshes (bounded-delay)
+    device_resid: float = 0.0  # final device-visible delta L1 (telemetry;
+    #                          # the published cert is the exact recompute)
 
 
 def _scatter_add(out: np.ndarray, idx: np.ndarray,
@@ -314,6 +319,75 @@ class _ShardDrainFactory:
                            self.alpha, self.eps_floor, self.spec)
 
 
+def _device_update(dg: DeltaGraph, state: RankState, *, p: int,
+                   exchange: str, tol: float, l1_target: float,
+                   seed_l1: float, sparsify_thresh: Optional[float],
+                   sparsify_refresh_every: int, pc_max_compute: int,
+                   pc_max_monitor: int, max_supersteps: int, backend: str,
+                   method: str, solver_max_iters: int, schedule_name: str
+                   ) -> Tuple[RankState, ShardedUpdateStats]:
+    """The device-transport drain: warm-start the linear form (eq. 7) from
+    the current iterate as p shard programs (runtime/device.py), then
+    certify with the host-side exact recompute.
+
+    The device loop's own termination sees only the all-reduced fragment
+    delta (||r||_1 up to view staleness), so the drain target starts at
+    half the l1 target and tightens 4x on every re-entry — the published
+    certificate is always `_exact_residual`, never the device criterion,
+    matching the other async transports' contract."""
+    from ..runtime.device import DeviceShardTransport
+
+    alpha = state.alpha
+    x, r = state.x, state.r
+    dev = DeviceShardTransport(
+        p, exchange=exchange,
+        sparsify_thresh=(float(sparsify_thresh)
+                         if sparsify_thresh is not None else 0.0),
+        sparsify_refresh_every=sparsify_refresh_every,
+        pc_max_compute=pc_max_compute, pc_max_monitor=pc_max_monitor)
+    op = dg.operator(alpha, v=state.v)
+    target = 0.5 * l1_target
+    supersteps = rows = fulls = 0
+    bytes_total = 0
+    attempts = 0
+    device_resid = 0.0
+    resid = float(np.abs(r).sum())
+    while (attempts == 0 or resid > l1_target) and attempts < 4:
+        attempts += 1
+        res = dev.run(op, x, target=target, max_supersteps=max_supersteps)
+        x[:] = res.x
+        supersteps += res.supersteps
+        rows += res.rows_sent
+        fulls += res.fulls
+        bytes_total += res.comm_bytes_total
+        device_resid = res.device_resid
+        # re-derive the maintained residual exactly from the new iterate
+        # (one O(nnz) host apply) — both the re-entry decision and the
+        # published certificate stand on it
+        r[:] = _exact_residual(dg, x, alpha, state.v)
+        resid = float(np.abs(r).sum())
+        target *= 0.25
+    pps = np.zeros(p, dtype=np.int64)
+    if resid <= l1_target:
+        return state, ShardedUpdateStats(
+            path="sharded_push", p=p, supersteps=supersteps, pushes=0,
+            pushes_per_shard=pps, exchanges=rows + fulls,
+            bytes_moved=bytes_total, seed_l1=seed_l1, resid_l1=resid,
+            cert=resid / (1.0 - alpha), stop_superstep=supersteps,
+            mode="async", attempts=attempts, transport="device",
+            rows_sent=rows, fulls=fulls, device_resid=device_resid,
+            schedule=schedule_name)
+    return _solver_fallback(
+        dg, state, alpha=alpha, tol=tol, method=method, backend=backend,
+        solver_max_iters=solver_max_iters,
+        stats_kw=dict(p=p, supersteps=supersteps, pushes=0,
+                      pushes_per_shard=pps, exchanges=rows + fulls,
+                      bytes_moved=bytes_total, seed_l1=seed_l1,
+                      mode="async", attempts=max(attempts, 1),
+                      transport="device", rows_sent=rows, fulls=fulls,
+                      device_resid=device_resid, schedule=schedule_name))
+
+
 def update_ranks_sharded(
         dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
         p: int = 4, tol: float = 1e-8, exchange: str = "allgather",
@@ -337,10 +411,17 @@ def update_ranks_sharded(
     runtime-layer cycle described in the module docstring, either as the
     deterministic superstep loop (``mode="superstep"``) or with zero
     inter-drain barriers (``mode="async"``) on the selected transport:
-    ``transport="threads"`` (worker threads, PR 4 behavior) or
+    ``transport="threads"`` (worker threads, PR 4 behavior),
     ``transport="procpool"`` (worker *processes* over a shared-memory
     ShardArena — the rendering whose raw wall-clock escapes the GIL;
-    ``n_workers`` sizes the pool, default min(p, cores)).  On success
+    ``n_workers`` sizes the pool, default min(p, cores)), or
+    ``transport="device"`` (p jax shard programs over a ``ue`` device
+    mesh running the same traced ShardStep as core.spmd — needs p
+    devices; on CPU launch under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=p``.  Faults,
+    observe and custom drain schedules are host-seam features and
+    raise; the device counters land on ``stats.rows_sent`` /
+    ``stats.fulls`` / ``stats.bytes_moved``).  On success
     ``stats.cert`` is sound and ``state.cert <= stats.cert`` (state.r is
     the exactly-maintained residual; the superstep bound is the driver's
     all-reduced sum, the async bound is the exact post-fold recompute —
@@ -391,11 +472,11 @@ def update_ranks_sharded(
     if mode not in ("superstep", "async"):
         raise ValueError(f"unknown mode {mode!r}; expected 'superstep' "
                          "or 'async'")
-    if transport not in ("threads", "procpool"):
+    if transport not in ("threads", "procpool", "device"):
         raise ValueError(f"unknown transport {transport!r}; expected "
-                         "'threads' or 'procpool'")
-    if transport == "procpool" and mode != "async":
-        raise ValueError("transport='procpool' requires mode='async' "
+                         "'threads', 'procpool' or 'device'")
+    if transport in ("procpool", "device") and mode != "async":
+        raise ValueError(f"transport={transport!r} requires mode='async' "
                          "(the superstep loop is a host loop)")
     faulty = faults is not None and faults.active
     if faulty and mode != "async":
@@ -404,7 +485,22 @@ def update_ranks_sharded(
     if observe and mode != "async":
         raise ValueError("observe=True requires mode='async' (the "
                          "superstep loop has no worker cycle to trace)")
+    if transport == "device":
+        # the device rendering is a pure jax program: no worker seam to
+        # inject faults at or trace, and drain scheduling is the traced
+        # step itself (observe counters roll in host-side, from the
+        # program's own (rows, fulls) outputs)
+        if faulty:
+            raise ValueError("faults= is not supported on "
+                             "transport='device' (no host worker seam)")
+        if observe:
+            raise ValueError("observe=True is not supported on "
+                             "transport='device'; the device counters "
+                             "(rows_sent/fulls/bytes) land on the stats")
     spec = make_schedule(schedule)
+    if transport == "device" and spec.name != "default":
+        raise ValueError("schedule= renderings are host-drain heuristics; "
+                         "transport='device' supports only the default")
     # the zero-cost contract: a spec whose drain rendering is the default
     # ladder passes order=None straight through (every hook skipped)
     drain_spec = spec if spec.drain_kind != "default" else None
@@ -428,6 +524,21 @@ def update_ranks_sharded(
     l1_target = (1.0 - alpha) * tol
     eps_floor = l1_target / max(n, 1)
     max_pushes = int(max_push_factor * n)
+
+    if transport == "device":
+        # --- device-program drain: p shard programs under shard_map run
+        # the same traced ShardStep as core.spmd (runtime/device.py); the
+        # published certificate is the host-side exact recompute, exactly
+        # like the other async transports
+        return _device_update(
+            dg, state, p=p, exchange=exchange, tol=tol,
+            l1_target=l1_target, seed_l1=seed_l1,
+            sparsify_thresh=sparsify_thresh,
+            sparsify_refresh_every=sparsify_refresh_every,
+            pc_max_compute=pc_max_compute, pc_max_monitor=pc_max_monitor,
+            max_supersteps=max_supersteps, backend=backend, method=method,
+            solver_max_iters=solver_max_iters, schedule_name=spec.name)
+
     arrays = _view_arrays(dg)
 
     if mode == "async":

@@ -156,3 +156,55 @@ assert err < 0.05, err
 print("local-sgd OK", err)
 """, n_devices=4, timeout=900)
     assert "local-sgd OK" in out
+
+
+@pytest.mark.slow
+def test_device_transport_backends_4dev():
+    """PR 9 tentpole, device rendering: the SAME traced ShardStep drives
+    both drain backends of DeviceShardTransport on a real (forced) p=4
+    mesh — segment-sum in float64 certifies at the 1e-8 scale, and the
+    Pallas BSR block path (float32 blocks, compensated accumulation)
+    lands within its looser f32 contract — and the f64 run reproduces
+    solve_spmd's sparsified iterate, since they assemble the identical
+    step builders."""
+    out = run_with_devices("""
+import numpy as np
+from repro.core import SPMDConfig, solve_spmd
+from repro.runtime import DeviceShardTransport
+from repro.graph.generate import powerlaw_webgraph
+from repro.graph.csr import TransitionT
+from repro.graph.google import GoogleOperator, exact_pagerank
+
+g = powerlaw_webgraph(n=800, target_nnz=6000, n_dangling=5, seed=3)
+op = GoogleOperator(pt=TransitionT.from_graph(g), alpha=0.85)
+xref = exact_pagerank(op, tol=1e-13)
+x0 = np.full(800, 1.0 / 800)
+
+# segment-sum drain, float64: certifies at the 1e-8 scale
+dev64 = DeviceShardTransport(4, exchange="sparsified",
+                             sparsify_refresh_every=8)
+r64 = dev64.run(op, x0, target=0.15 * 1e-8)
+assert r64.converged and r64.supersteps > 0
+err64 = np.abs(r64.x - xref).sum()
+assert err64 <= 5e-8, err64
+
+# Pallas BSR drain (interpret on CPU), float32 blocks + compensated
+# accumulation: the looser f32 contract
+dev32 = DeviceShardTransport(4, exchange="sparsified", dtype="float32",
+                             backend="bsr_pallas", accum="kahan",
+                             sparsify_refresh_every=8)
+r32 = dev32.run(op, x0, target=1e-5)
+assert r32.converged
+err32 = np.abs(r32.x - xref).sum()
+assert err32 <= 5e-4, err32
+
+# shared-step agreement: solve_spmd's sparsified fixed point and the
+# f64 device drain agree far below either's stopping scale
+cfg = SPMDConfig(p=4, schedule="sparsified", tol=1e-8, max_supersteps=500,
+                 sparsify_refresh_every=8)
+rs = solve_spmd(op, cfg)
+gap = np.abs(rs.x / rs.x.sum() - r64.x / r64.x.sum()).sum()
+assert gap <= 1e-6, gap
+print("backends OK", r64.supersteps, r32.supersteps, err64, err32)
+""", n_devices=4, timeout=900)
+    assert "backends OK" in out
