@@ -33,19 +33,23 @@ trace-demo:
 	$(PY) -m benchmarks.observe_bench --trace-demo
 
 # tier-1 gate + the quick benchmark pass that refreshes BENCH_PR<N>.json
-# (currently BENCH_PR9.json; see benchmarks/run.py --out) — run before
+# (currently BENCH_PR10.json; see benchmarks/run.py --out) — run before
 # every PR.  The measured suite runtime is embedded in the BENCH file so
 # benchmarks/check_tier1_runtime.py can gate against the best of the last
 # two PRs instead of the frozen PR2 snapshot; the observe gate then
 # asserts the observe=off hot path stayed within 3% of the pre-PR burn,
 # the schedule gate (PR 8) that the best drain schedule holds inflation
-# to <= 1.2x (threads) / <= 1.1x (procpool), and the device gate (PR 9)
+# to <= 1.2x (threads) / <= 1.1x (procpool), the device gate (PR 9)
 # that the device-transport rows certified at tol with exchange bytes
-# reproducing from their (rows, fulls) counters through the shared model.
+# reproducing from their (rows, fulls) counters through the shared
+# model, and the query-tier gate (PR 10) that batched PPR clears 3x over
+# the sequential loop and the load gen served certified, staleness-
+# bounded answers under a live updater.
 verify:
 	@start=$$(date +%s) && $(PY) -m pytest -q && \
 	echo $$(( $$(date +%s) - $$start )) > tier1_runtime_s.txt && \
 	$(PY) -m benchmarks.run --quick --tier1-seconds tier1_runtime_s.txt && \
-	$(PY) benchmarks/check_observe_overhead.py BENCH_PR9.json && \
-	$(PY) benchmarks/check_schedule_inflation.py BENCH_PR9.json && \
-	$(PY) benchmarks/check_device_transport.py BENCH_PR9.json
+	$(PY) benchmarks/check_observe_overhead.py BENCH_PR10.json && \
+	$(PY) benchmarks/check_schedule_inflation.py BENCH_PR10.json && \
+	$(PY) benchmarks/check_device_transport.py BENCH_PR10.json && \
+	$(PY) benchmarks/check_query_tier.py BENCH_PR10.json

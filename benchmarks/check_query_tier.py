@@ -1,0 +1,111 @@
+"""CI gate: the query tier must actually scale the query path (PR 10).
+
+    python benchmarks/check_query_tier.py [BENCH_PR10.json]
+
+Reads the ``query`` section of the given perf-trajectory file and gates
+the acceptance criteria of the batched-fused query tier:
+
+  * batched PPR throughput >= 3x the sequential per-seed loop at
+    batch >= 16 on the 50k graph, every lane exactly certified;
+  * the closed-loop load gen served queries while the daemon updater
+    applied 1%-delta batches (batches_applied >= 1, qps > 0, finite
+    p50/p99 for every query kind);
+  * every sampled served snapshot carried a valid certificate
+    (cert <= server tol), no personalized answer violated its tol;
+  * the router honored its staleness bound: zero rejects (redirects are
+    fine — that IS the bound working) and every replica ended admissible.
+
+Exit codes: 0 pass, 1 fail, 2 usage/missing section.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).parent.parent
+
+SPEEDUP_FLOOR = 3.0
+
+
+def main() -> int:
+    target = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        REPO_ROOT / "BENCH_PR10.json"
+    if not target.is_absolute():
+        target = REPO_ROOT / target
+    if not target.exists():
+        print(f"query tier gate: {target.name} not found")
+        return 2
+    rec = json.loads(target.read_text())
+    q = rec.get("query")
+    if q is None:
+        print(f"query tier gate: no query section in {target.name}")
+        return 2
+
+    ok = True
+
+    # ---- batched PPR throughput -------------------------------------
+    b = q["batched"]
+    best16 = max(r["speedup_vs_sequential"] for r in b["sweep"]
+                 if r["batch"] >= 16)
+    verdict = "OK" if best16 >= SPEEDUP_FLOOR else "FAIL"
+    print(f"batched   speedup_at_16={b['speedup_at_16']:.2f}x "
+          f"best(batch>=16)={best16:.2f}x (floor {SPEEDUP_FLOOR}x) "
+          f"{verdict}")
+    if best16 < SPEEDUP_FLOOR:
+        ok = False
+    for r in b["sweep"]:
+        if not r["certs_ok"]:
+            ok = False
+            print(f"FAIL cert: batch={r['batch']} "
+                  f"max_cert={r['max_cert']:.2e} > tol={b['tol']:.0e}")
+
+    # ---- load gen under update --------------------------------------
+    load = q["load"]
+    applied = load["updater"]["batches_applied"]
+    qps = load["qps_under_update"]
+    verdict = "OK" if applied >= 1 and qps > 0 else "FAIL"
+    print(f"load      {qps:.0f} qps over {load['duration_s']:.1f}s, "
+          f"{applied} x {load['delta_edges_per_batch']}-edge delta "
+          f"batches applied {verdict}")
+    if applied < 1 or qps <= 0:
+        ok = False
+    for kind, p in load["latency_ms"].items():
+        finite = all(math.isfinite(p[x]) for x in ("p50", "p99"))
+        print(f"          {kind:7s} p50={p['p50']:.1f}ms "
+              f"p99={p['p99']:.1f}ms n={load['queries'][kind]} "
+              f"{'OK' if finite else 'FAIL'}")
+        if not finite:
+            ok = False
+
+    # ---- certificates + staleness bounds ----------------------------
+    verdict = "OK" if load["served_cert_ok"] else "FAIL"
+    print(f"certs     max_served_cert={load['max_served_cert']:.2e} "
+          f"ppr_violations={load['ppr_cert_violations']} {verdict}")
+    if not load["served_cert_ok"] or load["ppr_cert_violations"]:
+        ok = False
+    rej = load["router"]["rejects"]
+    verdict = "OK" if rej == 0 else "FAIL"
+    print(f"router    routed={load['router']['routed']} "
+          f"redirects={load['router']['redirects']} rejects={rej} "
+          f"{verdict}")
+    if rej:
+        ok = False
+    hits = load["cache"]["hits"]
+    verdict = "OK" if hits >= 1 else "FAIL"
+    print(f"cache     hits={hits} survivals="
+          f"{load['cache']['survivals']} "
+          f"flushes={load['cache']['flushes']} {verdict}")
+    if hits < 1:
+        ok = False
+
+    if not ok:
+        print("query tier failed its acceptance gates — see "
+              "benchmarks/query_bench.py for the workload and "
+              "docs/serving.md for the tier's contract")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

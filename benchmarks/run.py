@@ -8,10 +8,11 @@ streaming-update bench, the sharded-runtime bench (sparsified vs
 allgather), the async-executor bench (async vs superstep shard
 drains, threads vs procpool vs the PR 9 device transport), the
 observability bench (push-inflation attribution, chaos trace demo,
-zero-cost-when-off gate) and the drain-schedule bench (priority /
-boundary-batched / randomized inflation arms, PR 8) and writes the
-machine-readable
-perf-trajectory file (``--out``, default BENCH_PR9.json) at the repo
+zero-cost-when-off gate), the drain-schedule bench (priority /
+boundary-batched / randomized inflation arms, PR 8) and the query-tier
+bench (batched PPR vs sequential + closed-loop load gen under a live
+updater, PR 10) and writes the machine-readable
+perf-trajectory file (``--out``, default BENCH_PR10.json) at the repo
 root; ``--tier1-seconds`` embeds the measured suite runtime for the
 check_tier1_runtime.py gate; --quick then skips the slow DES paper-table
 and SPMD staleness studies.
@@ -33,7 +34,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest studies")
     ap.add_argument("--skip-spmd", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR9.json",
+    ap.add_argument("--out", default="BENCH_PR10.json",
                     help="perf-trajectory output (BENCH_PR<N>.json for "
                          "PR N; relative paths land at the repo root)")
     ap.add_argument("--tier1-seconds", default=None,
@@ -184,6 +185,30 @@ def main() -> None:
         f"measured={screc['burn']['measured']},"
         f"cores={screc['burn']['cores']}"))
     brec["schedule"] = screc
+
+    print("== Query tier (batched PPR + closed-loop load gen, 50k) ==")
+    from benchmarks import query_bench
+    qrec = query_bench.main()
+    qb = qrec["batched"]
+    csv_rows.append((
+        "query_batched_ppr",
+        f"{qb['sweep'][-1]['ms_per_query'] * 1e3:.0f}",
+        f"speedup16={qb['speedup_at_16']:.2f}x,"
+        f"seq={qb['sequential_ms_per_query']:.0f}ms,"
+        f"path={qb['sweep'][-1]['path']},"
+        f"certs_ok={all(r['certs_ok'] for r in qb['sweep'])}"))
+    ql = qrec["load"]
+    csv_rows.append((
+        "query_load_gen",
+        f"{ql['latency_ms']['top_k']['p99'] * 1e3:.0f}",
+        f"qps={ql['qps_under_update']:.0f},"
+        f"updates={ql['updater']['batches_applied']},"
+        f"topk_p50={ql['latency_ms']['top_k']['p50']:.2f}ms,"
+        f"ppr_p99={ql['latency_ms']['ppr']['p99']:.0f}ms,"
+        f"cache_hits={ql['cache']['hits']},"
+        f"rejects={ql['router']['rejects']}"))
+    brec["query"] = qrec
+
     if tier1_seconds is not None:
         brec["tier1_seconds"] = tier1_seconds
     out_path.write_text(json.dumps(brec, indent=1))

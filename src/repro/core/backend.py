@@ -108,6 +108,48 @@ def _as_stack(a: np.ndarray, n: int, what: str) -> np.ndarray:
     return a
 
 
+def seed_stack(n: int, seed_sets, weight_sets=None) -> np.ndarray:
+    """Build an (n, nv) personalized-teleport stack from nv seed sets.
+
+    Each column is a probability vector concentrated on that query's seeds
+    (uniform over the set unless `weight_sets[i]` gives explicit weights,
+    which are L1-normalized).  This is the lane layout `prepare` consumes:
+    one fused solve over the stack amortizes every edge/block load across
+    all nv personalized problems.
+    """
+    seed_sets = list(seed_sets)
+    nv = len(seed_sets)
+    if nv == 0:
+        raise ValueError("seed_stack needs at least one seed set")
+    v = np.zeros((n, nv), dtype=np.float64)
+    for i, seeds in enumerate(seed_sets):
+        seeds = np.asarray(seeds, dtype=np.int64).ravel()
+        w = None if weight_sets is None else weight_sets[i]
+        if w is None:
+            v[seeds, i] = 1.0 / seeds.size
+        else:
+            w = np.asarray(w, dtype=np.float64).ravel()
+            v[seeds, i] = w / w.sum()
+    return v
+
+
+def as_lane_tol(tol, nv: int) -> np.ndarray:
+    """Coerce a scalar-or-per-lane tolerance to a validated (nv,) array.
+
+    The fused solver loops accept a tolerance *per lane* so mixed-tol
+    query batches share one solve: each lane stops (and may freeze out of
+    the apply) at its own threshold instead of the whole stack running to
+    the tightest one."""
+    t = np.asarray(tol, dtype=np.float64).ravel()
+    if t.size == 1:
+        t = np.full(nv, float(t[0]))
+    if t.size != nv:
+        raise ValueError(f"tol has {t.size} entries for {nv} lanes")
+    if not np.all(np.isfinite(t)) or np.any(t <= 0):
+        raise ValueError("per-lane tol entries must be finite and > 0")
+    return t
+
+
 def prepare(op: GoogleOperator, spec: BackendSpec, dtype,
             v: Optional[np.ndarray] = None,
             x0: Optional[np.ndarray] = None

@@ -22,8 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from ..graph.google import GoogleOperator
-from .backend import (BackendSpec, BackendMeta, as_spec, prepare,
-                      from_layout, google_apply, l1_residual, take_lanes)
+from .backend import (BackendSpec, BackendMeta, as_lane_tol, as_spec,
+                      prepare, from_layout, google_apply, l1_residual,
+                      take_lanes)
 
 
 @dataclasses.dataclass
@@ -36,15 +37,17 @@ class SolveResult:
                                                 # (differs under freezing)
 
 
-@partial(jax.jit, static_argnames=("meta", "linear", "tol", "max_iters"))
-def _solve_jit(dev: dict, x0: jax.Array, *, meta: BackendMeta, linear: bool,
-               tol: float, max_iters: int):
+@partial(jax.jit, static_argnames=("meta", "linear", "max_iters"))
+def _solve_jit(dev: dict, x0: jax.Array, tol: jax.Array, *,
+               meta: BackendMeta, linear: bool, max_iters: int):
     """Fused fixed-point loop: the iterate never leaves the backend layout
     (for bsr_pallas that is the padded (nbr, bm, nv) block layout — no
-    repacking between iterations)."""
+    repacking between iterations).  `tol` is a traced (nv,) per-lane
+    residual threshold (mixed-tol query batches share one compiled loop;
+    a scalar tol also no longer triggers a recompile per value)."""
     def cond(state):
         _, resid, it = state
-        return jnp.logical_and(jnp.max(resid) > tol, it < max_iters)
+        return jnp.logical_and(jnp.any(resid > tol), it < max_iters)
 
     def body(state):
         x, _, it = state
@@ -68,7 +71,7 @@ def _pow2(k: int) -> int:
 _CHUNK_MENU = (8, 16, 32, 64, 128, 256)
 
 
-def _adapt_chunk(prev_resid, resid, it: int, tol: float,
+def _adapt_chunk(prev_resid, resid, it: int, tol,
                  fallback: int) -> int:
     """Next recheck cadence from the observed per-lane convergence spread.
 
@@ -77,7 +80,8 @@ def _adapt_chunk(prev_resid, resid, it: int, tol: float,
     lands just past the *fastest* survivor's predicted crossing — that is
     the earliest moment a freeze (and possibly a pow2 compaction) can
     pay.  Tightly-clustered lanes thus get long chunks (few host syncs),
-    a wide spread gets short ones (fast lanes shed early).
+    a wide spread gets short ones (fast lanes shed early).  `tol` may be
+    a scalar or the survivors' per-lane threshold array.
     """
     with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
         rate = (resid / prev_resid) ** (1.0 / max(it, 1))
@@ -92,8 +96,8 @@ def _adapt_chunk(prev_resid, resid, it: int, tol: float,
     return _CHUNK_MENU[-1]
 
 
-def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
-                  max_iters: int, chunk):
+def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool,
+                  tol: np.ndarray, max_iters: int, chunk):
     """Chunked driver that freezes converged lanes out of the fused apply.
 
     The fused while_loop only ever guarantees each lane's residual <= tol
@@ -118,22 +122,24 @@ def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
     lane_iters = np.zeros(nv, dtype=np.int64)
     active = np.arange(nv)          # lane ids at stack positions 0..k-1
     width = _pow2(nv)
+    stack_tol = tol.copy()          # per-lane threshold at stack positions
     if width > nv:
         pad = np.concatenate([np.arange(nv),
                               np.zeros(width - nv, np.int64)])
         dev, meta, x_dev = take_lanes(meta, dev, x_dev, pad)
+        stack_tol = stack_tol[pad]
     it_total = 0
     prev_resid = None               # survivors' residuals a chunk ago
     while True:
         step = min(cur, max_iters - it_total)
-        x_dev, resid_dev, it = _solve_jit(dev, x_dev, meta=meta,
-                                          linear=linear, tol=tol,
-                                          max_iters=step)
+        x_dev, resid_dev, it = _solve_jit(
+            dev, x_dev, jnp.asarray(stack_tol, x_dev.dtype), meta=meta,
+            linear=linear, max_iters=step)
         it = int(it)
         it_total += it
         lane_iters[active] += it
         resid_np = np.asarray(resid_dev, dtype=np.float64)[:active.size]
-        done = resid_np <= tol
+        done = resid_np <= tol[active]
         if done.all() or it_total >= max_iters:
             x_np = from_layout(meta, x_dev)
             x_out[:, active] = x_np[:, :active.size]
@@ -142,7 +148,7 @@ def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
         if adaptive and it > 0:
             if prev_resid is not None:
                 cur = _adapt_chunk(prev_resid[~done], resid_np[~done],
-                                   it, tol, cur)
+                                   it, tol[active][~done], cur)
             prev_resid = resid_np
         new_width = _pow2(int((~done).sum()))
         if done.any() and new_width < width:
@@ -159,6 +165,7 @@ def _solve_frozen(dev, x_dev, meta: BackendMeta, linear: bool, tol: float,
                                   np.full(new_width - keep_pos.size,
                                           keep_pos[0], np.int64)])
             dev, meta, x_dev = take_lanes(meta, dev, x_dev, idx)
+            stack_tol = stack_tol[idx]
             width = new_width
         # lanes at <= tol that do not trigger a compaction stay in the
         # stack (their slots exist anyway) and keep improving for free
@@ -182,6 +189,9 @@ def solve_power(op: GoogleOperator, x0: Optional[np.ndarray] = None,
     every operator load. `backend="bsr_pallas"` runs the hub-split BSR path
     (float32; L1 residuals floor near 1e-7). `reorder` ("rcm" | "indeg")
     solves in a block-densifying page permutation and maps the answer back.
+    `tol` may be a scalar or an (nv,) per-lane array (mixed-tolerance query
+    batches: each lane stops — and under freezing drops out of the fused
+    apply — at its own threshold).
 
     `freeze_lanes` masks already-converged lanes out of the fused apply
     (chunked driver, power-of-two lane compaction) so large teleport
@@ -252,15 +262,16 @@ def _solve(op, x0, tol, max_iters, linear, dtype, backend="segment_sum",
     ctx = jax.experimental.enable_x64() if use_x64 else contextlib.nullcontext()
     with ctx:
         dev, meta, x0_dev = prepare(op, spec, dtype=dtype, v=v, x0=x0)
+        tol_vec = as_lane_tol(tol, meta.nv)
         freeze = (meta.nv >= 8 if freeze_lanes == "auto"
                   else bool(freeze_lanes)) and meta.nv > 1
         if freeze:
             x, resid, iters, lane_iters = _solve_frozen(
-                dev, x0_dev, meta, linear, tol, max_iters, freeze_chunk)
+                dev, x0_dev, meta, linear, tol_vec, max_iters, freeze_chunk)
         else:
-            x_dev, resid, iters = _solve_jit(dev, x0_dev, meta=meta,
-                                             linear=linear, tol=tol,
-                                             max_iters=max_iters)
+            x_dev, resid, iters = _solve_jit(
+                dev, x0_dev, jnp.asarray(tol_vec, x0_dev.dtype), meta=meta,
+                linear=linear, max_iters=max_iters)
             x = from_layout(meta, x_dev)
             resid = np.asarray(resid, dtype=np.float64)
             iters = int(iters)

@@ -66,21 +66,29 @@ class GoogleOperator:
 
     def apply_numpy(self, x: np.ndarray, pt_sp: Optional[sp.csr_matrix] = None
                     ) -> np.ndarray:
-        """y = G x (dense vector, matrix-free)."""
+        """y = G x (dense vector or (n, nv) lane stack, matrix-free)."""
         pt_sp = self.to_scipy_pt() if pt_sp is None else pt_sp
         v = self.teleport()
-        dangling_mass = float(x[self.pt.dangling].sum())
+        if x.ndim == 2 and v.ndim == 1:
+            v = v[:, None]
+        dangling_mass = x[self.pt.dangling].sum(axis=0)
         y = self.alpha * (pt_sp @ x)
         y += self.alpha * dangling_mass / self.n  # w = e/n
-        y += (1.0 - self.alpha) * float(x.sum()) * v
+        y += (1.0 - self.alpha) * x.sum(axis=0) * v
         return y
 
     def apply_linear_numpy(self, x: np.ndarray,
                            pt_sp: Optional[sp.csr_matrix] = None) -> np.ndarray:
-        """y = R x + b with R = alpha S, b = (1 - alpha) v."""
+        """y = R x + b with R = alpha S, b = (1 - alpha) v.
+
+        `x` may be an (n, nv) stack; with a lane-stacked teleport `v` this
+        is the host-side exact residual route for batched personalized
+        solves (one spmm certifies every lane)."""
         pt_sp = self.to_scipy_pt() if pt_sp is None else pt_sp
         v = self.teleport()
-        dangling_mass = float(x[self.pt.dangling].sum())
+        if x.ndim == 2 and v.ndim == 1:
+            v = v[:, None]
+        dangling_mass = x[self.pt.dangling].sum(axis=0)
         y = self.alpha * (pt_sp @ x)
         y += self.alpha * dangling_mass / self.n
         y += (1.0 - self.alpha) * v

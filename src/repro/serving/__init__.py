@@ -1,0 +1,47 @@
+"""Query-tier scale-out over the streaming `RankServer`.
+
+Three composable pieces (see docs/serving.md):
+
+  * `QueryBatcher`  — fuses concurrent `personalized()` calls into the
+                      (n, nv) lane solve `ppr_push_batched`;
+  * `QueryRouter` / `ReadReplica` — N snapshot holders behind
+                      staleness-bounded reads with atomic publish fan-out;
+  * `PPRCache`      — (seed set, version)-keyed result cache with
+                      certified-staleness invalidation.
+
+`attach_query_tier(server)` wires all three.  The LLM serving engine
+(`serving.engine`) is a separate subsystem and is deliberately NOT
+imported here — import it as `repro.serving.engine` directly.
+"""
+from .batcher import QueryBatcher
+from .ppr_cache import CacheHitStats, PPRCache
+from .router import QueryRouter, ReadReplica, StalenessBoundExceeded
+
+__all__ = [
+    "QueryBatcher", "PPRCache", "CacheHitStats",
+    "QueryRouter", "ReadReplica", "StalenessBoundExceeded",
+    "attach_query_tier",
+]
+
+
+def attach_query_tier(server, *, max_batch: int = 16,
+                      max_delay_s: float = 0.002,
+                      cache_capacity: int = 64, replicas: int = 0,
+                      max_version_lag: int = 0, on_stale: str = "redirect",
+                      backend: str = "auto"):
+    """Wire a full query tier onto a `RankServer`.
+
+    Returns (batcher, cache, router); router is None when replicas == 0.
+    The batcher is attached and running; stop it with `batcher.stop()`.
+    """
+    cache = PPRCache(alpha=server.alpha, capacity=cache_capacity)
+    server._ppr_cache = cache
+    batcher = QueryBatcher(server, max_batch=max_batch,
+                           max_delay_s=max_delay_s,
+                           backend=backend).attach()
+    router = None
+    if replicas > 0:
+        router = QueryRouter(server, replicas,
+                             max_version_lag=max_version_lag,
+                             on_stale=on_stale)
+    return batcher, cache, router

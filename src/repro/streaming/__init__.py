@@ -23,8 +23,9 @@ Layers:
 """
 from .delta import (CSRGraph, DeltaGraph, DeltaReceipt, EdgeDelta,
                     FrozenGraphView, merge_deltas)
-from .incremental import (RankState, UpdateStats, cold_state, ppr_push,
-                          refresh_residual, update_ranks)
+from .incremental import (BatchedPPRStats, RankState, UpdateStats,
+                          cold_state, ppr_push, ppr_push_batched,
+                          refresh_residual, update_ranks, validate_seeds)
 from .sharded import ShardedUpdateStats, update_ranks_sharded
 from .server import RankServer, RankSnapshot
 from .scenario import (BatchRecord, ReplayConfig, ReplayResult,
@@ -34,8 +35,9 @@ from .scenario import (BatchRecord, ReplayConfig, ReplayResult,
 __all__ = [
     "DeltaGraph", "DeltaReceipt", "EdgeDelta", "FrozenGraphView",
     "merge_deltas",
-    "RankState", "UpdateStats", "cold_state", "ppr_push",
-    "refresh_residual", "update_ranks",
+    "BatchedPPRStats", "RankState", "UpdateStats", "cold_state",
+    "ppr_push", "ppr_push_batched", "refresh_residual", "update_ranks",
+    "validate_seeds",
     "ShardedUpdateStats", "update_ranks_sharded",
     "RankServer", "RankSnapshot",
     "BatchRecord", "ReplayConfig", "ReplayResult",

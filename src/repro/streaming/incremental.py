@@ -37,6 +37,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..core.backend import as_lane_tol, seed_stack
 from ..core.pagerank import solve_linear, solve_power
 from ..runtime.schedule import make_schedule
 from .delta import DeltaGraph, EdgeDelta
@@ -567,6 +568,46 @@ def update_ranks(dg: DeltaGraph, delta: EdgeDelta, state: RankState, *,
 # ---------------------------------------------------------------------------
 # personalized queries (serve-side): approximate PPR by the same pushes
 # ---------------------------------------------------------------------------
+def validate_seeds(n: int, seeds, weights=None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Validate one personalized query's (seeds, weights) against an
+    n-node graph and return the canonical pair: seed ids sorted ascending
+    with the matching L1-normalized weight for each.
+
+    Raises ValueError for every input that would previously produce a
+    silent wrong answer: duplicate seed ids (the old `np.add.at` scatter
+    summed them, skewing the teleport), out-of-range ids (negative or
+    >= n: garbage pushes or an IndexError deep in the sweep), and
+    non-normalizable weights (length mismatch, non-finite entries,
+    negative entries, or total mass <= 0 — dividing by that sum yields
+    NaN/sign-flipped teleports)."""
+    seeds = np.asarray(seeds, dtype=np.int64).ravel()
+    if seeds.size == 0:
+        raise ValueError("personalized query needs at least one seed")
+    if seeds.min() < 0 or seeds.max() >= n:
+        raise ValueError(
+            f"seed ids must be in [0, {n}); got "
+            f"[{seeds.min()}, {seeds.max()}]")
+    order = np.argsort(seeds, kind="stable")
+    seeds = seeds[order]
+    if np.any(seeds[1:] == seeds[:-1]):
+        raise ValueError("duplicate seed ids in personalized query; "
+                         "merge their weights instead")
+    if weights is None:
+        return seeds, np.full(seeds.size, 1.0 / seeds.size)
+    w = np.asarray(weights, dtype=np.float64).ravel()
+    if w.shape != order.shape:
+        raise ValueError(f"{w.size} weights for {seeds.size} seeds")
+    if not np.all(np.isfinite(w)):
+        raise ValueError("seed weights must be finite")
+    if np.any(w < 0):
+        raise ValueError("seed weights must be >= 0")
+    s = w.sum()
+    if s <= 0:
+        raise ValueError("seed weights are not normalizable (sum <= 0)")
+    return seeds, w[order] / s
+
+
 def ppr_push(view, seeds, weights=None, alpha: float = 0.85,
              tol: float = 1e-4, max_push_factor: float = 200.0
              ) -> Tuple[np.ndarray, float, UpdateStats]:
@@ -579,18 +620,14 @@ def ppr_push(view, seeds, weights=None, alpha: float = 0.85,
     usable localized approximation, just uncertified).  Serving tolerances
     are intentionally loose: draining single-seed mass by a factor f costs
     about log(f)/log(1/alpha) frontier sweeps, so tol=1e-6-grade answers
-    are full solves in disguise — ask `solve_linear` for those.
+    are full solves in disguise — ask `solve_linear` (or the batched
+    lane solve `ppr_push_batched`) for those.
     """
     n = view.n
-    seeds = np.asarray(seeds, dtype=np.int64).ravel()
-    if weights is None:
-        w = np.full(seeds.size, 1.0 / seeds.size)
-    else:
-        w = np.asarray(weights, dtype=np.float64).ravel()
-        w = w / w.sum()
+    seeds, w = validate_seeds(n, seeds, weights)
     x = np.zeros(n)
     r = np.zeros(n)
-    np.add.at(r, seeds, (1.0 - alpha) * w)
+    r[seeds] = (1.0 - alpha) * w
     drained, pushes, visited, peak = _push(
         view, x, r, alpha, l1_target=(1.0 - alpha) * tol, visit_cap=n,
         max_pushes=int(max_push_factor * n))
@@ -602,3 +639,154 @@ def ppr_push(view, seeds, weights=None, alpha: float = 0.85,
         path="push", pushes=pushes, nodes_visited=visited,
         frontier_peak=peak, seed_l1=1.0 - alpha, resid_l1=resid, cert=cert,
         pushes_first=visited, pushes_repeat=pushes - visited)
+
+
+@dataclasses.dataclass
+class BatchedPPRStats:
+    """Stats of one fused multi-seed personalized solve."""
+    path: str                 # "batched_linear" | "batched_power" |
+                              # "batched_host"
+    nv: int                   # lanes (queries) in the batch
+    iters: int                # fused-loop iterations (max over lanes)
+    lane_iters: np.ndarray    # (nv,) per-lane iterations under freezing
+    certs: np.ndarray         # (nv,) exact per-lane certificates
+    tol: np.ndarray           # (nv,) per-lane requested tolerances
+
+
+def _host_stack_solve(pt_sp, dangling_idx: np.ndarray, alpha: float,
+                      v_stack: np.ndarray, tol_res: np.ndarray,
+                      max_iters: int
+                      ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Richardson iteration x <- alpha S x + b on an (n, nv) host stack
+    through one scipy CSR spmm per step, with per-lane stopping and lane
+    compaction (a finished lane's column leaves the spmm).
+
+    This is the CPU fast path for batched personalized solves: a scipy
+    spmm over a dense lane stack runs the same nnz*nv multiply-adds as
+    the jax segment-sum gather but without materializing the (nnz, nv)
+    gather buffer — on a small-core host that buffer is the whole cost.
+    Accelerator runs keep the jax lane backends (`backend=` below).
+    """
+    n, nv = v_stack.shape
+    b = (1.0 - alpha) * v_stack
+    x = np.full((n, nv), 1.0 / n)
+    out = np.empty((n, nv))
+    lane_iters = np.zeros(nv, dtype=np.int64)
+    active = np.arange(nv)
+    it = 0
+    while active.size and it < max_iters:
+        y = alpha * (pt_sp @ x)
+        y += (alpha / n) * x[dangling_idx].sum(axis=0)[None, :]
+        y += b[:, active]
+        resid = np.abs(y - x).sum(axis=0)
+        x = y
+        it += 1
+        lane_iters[active] += 1
+        done = resid <= tol_res[active]
+        if done.any():
+            out[:, active[done]] = x[:, done]
+            x = x[:, ~done]
+            active = active[~done]
+    if active.size:                      # max_iters hit: flush as-is
+        out[:, active] = x
+    return out, lane_iters, it
+
+
+def ppr_push_batched(view, seed_sets, weight_sets=None, *,
+                     alpha: float = 0.85, tol=1e-4, op=None, pt_sp=None,
+                     backend: str = "auto", method: str = "linear",
+                     max_iters: int = 2000,
+                     freeze_lanes="auto", freeze_chunk="auto"
+                     ) -> Tuple[np.ndarray, np.ndarray, BatchedPPRStats]:
+    """Batched personalized PageRank: nv concurrent queries fused into
+    multi-vector (n, nv) lanes — one solve over a seed-stacked teleport,
+    so every sparse-structure load is amortized across all queries
+    instead of each seed paying its own push cascade.
+
+    `tol` may be a scalar or per-query sequence: mixed-tolerance batches
+    run as one solve with per-lane thresholds, and finished lanes drop
+    out of the iteration (host compaction, or `freeze_lanes`/
+    `freeze_chunk` on the jax backends).
+
+    `backend` picks the lane engine: "scipy" iterates the (n, nv) stack
+    through host CSR spmms (`_host_stack_solve` — the fast path on
+    CPU-only hosts), "segment_sum"/"bsr_pallas" run the fused jit loops
+    of `core.backend` (the accelerator paths, where lanes share every
+    block load), and "auto" resolves to "scipy" on a CPU jax backend and
+    "segment_sum" otherwise.
+
+    `view` is the graph (DeltaGraph, or a FrozenGraphView when `op` — a
+    `GoogleOperator` of the *same version* — is supplied, e.g. captured on
+    a `RankSnapshot` by the serving tier).  `pt_sp` (host scipy P^T)
+    feeds the host path and the exact certification; it is derived from
+    `op`/`view` when omitted.
+
+    Returns (X, certs, stats): X is the (n, nv) column-per-query result,
+    and each certs[i] = ||x_i - x*_i||_1 bound is recomputed *exactly*
+    (one host spmm over all lanes) — never the solver's own residual — so
+    the published certificates match `update_ranks`' contract.  A lane
+    whose cert misses its tol (e.g. the bsr_pallas f32 floor) warns via
+    `_check_cert` and reports the true, larger bound.
+    """
+    if method not in ("linear", "power"):
+        raise ValueError(f"unknown method {method!r}")
+    if backend == "auto":
+        import jax
+        backend = ("scipy" if jax.default_backend() == "cpu"
+                   and method == "linear" else "segment_sum")
+    if backend == "scipy" and method != "linear":
+        raise ValueError("backend='scipy' implements the linear form "
+                         "only; use a jax backend for method='power'")
+    n = view.n if view is not None else op.n
+    seed_sets = list(seed_sets)
+    nv = len(seed_sets)
+    if weight_sets is not None and len(weight_sets) != nv:
+        raise ValueError(f"{len(weight_sets)} weight sets for {nv} "
+                         "seed sets")
+    pairs = [validate_seeds(n, s, None if weight_sets is None
+                            else weight_sets[i])
+             for i, s in enumerate(seed_sets)]
+    tol_vec = as_lane_tol(tol, nv)
+
+    if op is None:
+        if not isinstance(view, DeltaGraph):
+            raise ValueError(
+                "ppr_push_batched needs op= (a GoogleOperator of the "
+                "view's version) when view is not a DeltaGraph — the "
+                "serving tier captures it on each RankSnapshot")
+        op = view.operator(alpha)
+        if pt_sp is None:
+            pt_sp = view.scipy_pt()
+    if pt_sp is None:
+        pt_sp = op.to_scipy_pt()
+
+    from ..graph.google import GoogleOperator
+    v_stack = seed_stack(n, [s for s, _ in pairs], [w for _, w in pairs])
+    op_b = GoogleOperator(pt=op.pt, alpha=alpha, v=v_stack)
+    # same 0.5x headroom convention as cold_state: the exact recompute
+    # below must land under (1 - alpha) * tol after solver exit
+    tol_res = 0.5 * (1.0 - alpha) * tol_vec
+    if backend == "scipy":
+        x, lane_iters, iters = _host_stack_solve(
+            pt_sp, np.flatnonzero(op.pt.dangling), alpha, v_stack,
+            tol_res, max_iters)
+        path = "batched_host"
+    else:
+        solver = solve_linear if method == "linear" else solve_power
+        res = solver(op_b, tol=tol_res, max_iters=max_iters,
+                     backend=backend, freeze_lanes=freeze_lanes,
+                     freeze_chunk=freeze_chunk)
+        x = np.asarray(res.x, dtype=np.float64)
+        if x.ndim == 1:
+            x = x[:, None]
+        lane_iters, iters = res.lane_iters, res.iters
+        path = f"batched_{method}"
+    r = op_b.apply_linear_numpy(x, pt_sp=pt_sp) - x
+    resid = np.abs(r).sum(axis=0)
+    certs = resid / (1.0 - alpha)
+    worst = int(np.argmax(certs / tol_vec))
+    _check_cert(float(resid[worst]), float(tol_vec[worst]), alpha,
+                f"ppr_push_batched[{backend}] lane {worst}")
+    return x, certs, BatchedPPRStats(
+        path=path, nv=nv, iters=int(iters),
+        lane_iters=np.asarray(lane_iters), certs=certs, tol=tol_vec)

@@ -57,10 +57,25 @@ class RankSnapshot:
     published_at: float         # wall-clock publish time
     pending_at_publish: int     # deltas still queued when this was cut
     seq: int                    # publish sequence number
+    op: Optional[object] = None     # GoogleOperator of `version` (only when
+                                    # the server runs with snapshot_ops on:
+                                    # the batched-PPR lane solve needs it)
+    pt_sp: Optional[object] = None  # host scipy P^T of `version` (exact
+                                    # certification spmm for batched PPR)
 
     @property
     def n(self) -> int:
         return int(self.x.shape[0])
+
+    def _order_cache(self) -> dict:
+        # the snapshot is frozen but not slotted: hang the memo off
+        # __dict__ (same pattern as GoogleOperator._cache); races between
+        # query threads are benign (both compute the same array)
+        cache = self.__dict__.get("_topk_memo")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_topk_memo", cache)
+        return cache
 
     def top_k(self, k: int = 10) -> Tuple[np.ndarray, np.ndarray]:
         k = min(k, self.n)
@@ -70,9 +85,31 @@ class RankSnapshot:
             # empties instead
             return (np.empty(0, dtype=np.int64),
                     np.empty(0, dtype=self.x.dtype))
-        part = np.argpartition(-self.x, k - 1)[:k]
-        order = part[np.argsort(-self.x[part], kind="stable")]
-        return order, self.x[order]
+        # memoize the expensive argpartition per power-of-two ceiling K:
+        # hot top-k traffic under load re-slices one cached order instead
+        # of re-partitioning the full rank vector per call.  Ties break
+        # deterministically (descending score, then ascending id) so a
+        # k-prefix of the K-order equals a direct top-k.
+        K = self.n if k >= self.n else min(1 << (k - 1).bit_length(),
+                                           self.n)
+        cache = self._order_cache()
+        order = cache.get(K)
+        if order is None:
+            # any cached superset order is already sorted: its k-prefix
+            # IS the answer — re-slice it instead of re-partitioning
+            bigger = [Kc for Kc in cache if Kc >= k]
+            if bigger:
+                order = cache[min(bigger)]
+            else:
+                if K >= self.n:
+                    order = np.lexsort((np.arange(self.n), -self.x))
+                else:
+                    part = np.argpartition(-self.x, K - 1)[:K]
+                    order = part[np.lexsort((part, -self.x[part]))]
+                order = order.astype(np.int64, copy=False)
+                cache[K] = order
+        top = order[:k]
+        return top, self.x[top]
 
     def scores(self, ids) -> np.ndarray:
         return self.x[np.asarray(ids, dtype=np.int64)]
@@ -93,7 +130,8 @@ class RankServer:
                  shard_mode: str = "superstep",
                  shard_transport: str = "threads",
                  shard_workers: Optional[int] = None,
-                 drain_schedule=None):
+                 drain_schedule=None,
+                 snapshot_ops: bool = False):
         if updater not in ("incremental", "sharded"):
             raise ValueError(f"unknown updater {updater!r}; expected "
                              "'incremental' or 'sharded'")
@@ -135,6 +173,19 @@ class RankServer:
         # certificate every snapshot publishes is schedule-independent)
         self.drain_schedule = make_schedule(drain_schedule)
 
+        # query-tier hooks (src/repro/serving): a QueryBatcher fuses
+        # concurrent personalized() calls into one (n, nv) lane solve, a
+        # PPRCache short-circuits repeats under a certified drift bound,
+        # and subscribe() fans each publish out to router read-replicas.
+        # snapshot_ops=True captures the per-version GoogleOperator +
+        # host P^T on every snapshot (what the batched solve consumes);
+        # off by default — it fronts the O(nnz) per-version transition
+        # build that pure push/serve paths never need.
+        self.snapshot_ops = bool(snapshot_ops)
+        self._ppr_batcher = None
+        self._ppr_cache = None
+        self._subscribers: List = []
+
         # working buffer (updater-owned) + cold certification
         self._state: RankState = cold_state(
             dg, alpha=alpha, tol=cold_tol if cold_tol is not None else tol,
@@ -175,16 +226,50 @@ class RankServer:
         x = self._state.x.copy()
         x.setflags(write=False)
         self._seq += 1
+        op = pt_sp = None
+        if self.snapshot_ops:
+            # memoized per version on the DeltaGraph: the first cut of a
+            # version pays the transition build, later cuts are pointer
+            # copies — batched PPR and exact certification read these
+            op = self.dg.operator(self.alpha)
+            pt_sp = self.dg.scipy_pt()
         snap = RankSnapshot(
             x=x, view=self.dg.freeze(), version=self._state.version,
             cert=self._state.cert, published_at=time.time(),
-            pending_at_publish=self._queue.qsize(), seq=self._seq)
+            pending_at_publish=self._queue.qsize(), seq=self._seq,
+            op=op, pt_sp=pt_sp)
         self._snapshot = snap   # atomic reference swap — the publish
+        for cb in list(self._subscribers):
+            # publish fan-out (router read-replicas): subscriber errors
+            # must never kill the updater — drop them on the floor, the
+            # replica just stays a publish behind
+            try:
+                cb(snap)
+            except Exception:
+                pass
         return snap
 
     def snapshot(self) -> RankSnapshot:
         """The stable buffer (immutable; hold it as long as you like)."""
         return self._snapshot
+
+    def subscribe(self, callback) -> None:
+        """Register a publish listener: `callback(snap)` runs on every
+        `_cut_snapshot` (updater thread) with the freshly published
+        `RankSnapshot`.  This is the router's atomic fan-out channel —
+        replicas install the reference, they never copy the vector."""
+        self._subscribers.append(callback)
+        callback(self._snapshot)   # catch the replica up immediately
+
+    def enable_snapshot_ops(self) -> None:
+        """Switch on per-snapshot operator capture and re-publish so the
+        current snapshot carries `op`/`pt_sp` too (the query batcher
+        calls this when it attaches)."""
+        if self.snapshot_ops and self._snapshot.op is not None:
+            return
+        self.snapshot_ops = True
+        with self._lock:
+            self._cut_snapshot()
 
     # ------------------------------------------------------------------
     # ingest + update
@@ -256,6 +341,12 @@ class RankServer:
                 if fell_back:
                     self.fallbacks += 1
                 self.last_stats = stats
+            cache = self._ppr_cache
+            if cache is not None:
+                # advance the cache's certified drift accounting BEFORE
+                # publishing, so a query against the new snapshot can
+                # already hit entries whose bound survived this delta
+                cache.note_update(self.dg._last_receipt)
             self._cut_snapshot()
             return stats
 
@@ -460,15 +551,41 @@ class RankServer:
             self.queries_served += 1
         return self._snapshot.scores(ids)
 
-    def personalized(self, seeds, weights=None, tol: float = 1e-4
-                     ) -> Tuple[np.ndarray, float, UpdateStats]:
+    def personalized(self, seeds, weights=None, tol: float = 1e-4):
         """Approximate personalized PageRank served against the stable
-        snapshot's frozen graph (push-local; never blocks the updater)."""
+        snapshot's frozen graph.  Returns (x, cert, stats); cert bounds
+        ||x - x*||_1 against the snapshot's own graph version.
+
+        Plain servers answer with a per-query Gauss-Southwell push solve
+        (push-local; never blocks the updater).  With a `QueryBatcher`
+        attached (serving.attach_query_tier) concurrent calls fuse into
+        one (n, nv) lane solve; with a `PPRCache` attached, repeats whose
+        certified drift bound still clears `tol` return without solving.
+        """
         with self._stat_lock:
             self.queries_served += 1
         snap = self._snapshot
-        return ppr_push(snap.view, seeds, weights=weights,
-                        alpha=self.alpha, tol=tol)
+        cache = self._ppr_cache
+        if cache is not None:
+            hit = cache.get(snap, seeds, weights, tol)
+            if hit is not None:
+                return hit
+        # with a cache attached, solve misses to half the query tol: a
+        # push stops just under its target, so a tol-solved entry would
+        # enter the cache with no headroom and die on the first delta
+        # that moves any of its mass — half-tol entries survive real
+        # version drift (see serving/ppr_cache.py)
+        solve_tol = 0.5 * tol if cache is not None else tol
+        batcher = self._ppr_batcher
+        if batcher is not None:
+            x, cert, stats, snap = batcher.submit(seeds, weights,
+                                                  solve_tol)
+        else:
+            x, cert, stats = ppr_push(snap.view, seeds, weights=weights,
+                                      alpha=self.alpha, tol=solve_tol)
+        if cache is not None and np.isfinite(cert):
+            cache.put(snap, seeds, weights, tol, x, cert)
+        return x, cert, stats
 
     def staleness(self) -> Dict[str, float]:
         """How far behind the stable buffer is, right now.

@@ -1,0 +1,441 @@
+"""PR 10 query tier: batched PPR, seed validation, top-k memo,
+QueryBatcher, QueryRouter, and the residual-maintained PPRCache.
+
+Budget note: every 50k check rides the session-scoped `accept_graph`
+fixture (tests/conftest.py) — no fresh cold solves here.  Everything
+else runs on a module-scoped 5k graph or the session 2k `small_graph`.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.pagerank import solve_linear
+from repro.serving import (PPRCache, QueryBatcher, QueryRouter,
+                           StalenessBoundExceeded, attach_query_tier)
+from repro.streaming import (DeltaGraph, EdgeDelta, RankServer, ppr_push,
+                             ppr_push_batched, validate_seeds)
+
+ALPHA = 0.85
+
+
+def _delta(add_src, add_dst):
+    return EdgeDelta(np.asarray(add_src, np.int64),
+                     np.asarray(add_dst, np.int64),
+                     np.empty(0, np.int64), np.empty(0, np.int64))
+
+
+@pytest.fixture(scope="module")
+def mid_dg():
+    from repro.graph.generate import powerlaw_webgraph
+    g = powerlaw_webgraph(n=5000, target_nnz=40000, n_dangling=10, seed=11)
+    return DeltaGraph(g)
+
+
+@pytest.fixture(scope="module")
+def mid_seed_sets():
+    rng = np.random.default_rng(23)
+    return [rng.choice(5000, size=int(rng.integers(1, 4)), replace=False)
+            for _ in range(12)]
+
+
+# ---------------------------------------------------------------------------
+# validate_seeds
+# ---------------------------------------------------------------------------
+class TestValidateSeeds:
+    def test_canonical_sorted_output(self):
+        s, w = validate_seeds(100, [9, 3, 7], [0.2, 0.5, 0.3])
+        assert s.tolist() == [3, 7, 9]
+        # weights follow their seed through the sort, then L1-normalize
+        np.testing.assert_allclose(w, [0.5, 0.3, 0.2])
+        np.testing.assert_allclose(w.sum(), 1.0)
+
+    def test_default_uniform_weights(self):
+        s, w = validate_seeds(10, [4, 1])
+        assert s.tolist() == [1, 4]
+        np.testing.assert_allclose(w, [0.5, 0.5])
+
+    def test_unnormalized_weights_are_normalized(self):
+        _, w = validate_seeds(10, [1, 2], [3.0, 1.0])
+        np.testing.assert_allclose(w, [0.75, 0.25])
+
+    @pytest.mark.parametrize("seeds,weights", [
+        ([], None),                      # empty
+        ([5, 5], None),                  # duplicate ids
+        ([-1], None),                    # negative id
+        ([10], None),                    # id >= n
+        ([1, 2], [0.5]),                 # weight length mismatch
+        ([1, 2], [0.5, np.nan]),         # non-finite weight
+        ([1, 2], [0.5, np.inf]),
+        ([1, 2], [0.5, -0.1]),           # negative weight
+        ([1, 2], [0.0, 0.0]),            # sum <= 0
+    ])
+    def test_rejects(self, seeds, weights):
+        with pytest.raises(ValueError):
+            validate_seeds(10, seeds, weights)
+
+    def test_ppr_push_propagates(self, mid_dg):
+        view = mid_dg.freeze()
+        with pytest.raises(ValueError):
+            ppr_push(view, [7, 7])
+        with pytest.raises(ValueError):
+            ppr_push(view, [1], weights=[-1.0])
+
+    def test_server_personalized_propagates(self, mid_dg):
+        srv = RankServer(mid_dg, alpha=ALPHA, tol=1e-5)
+        with pytest.raises(ValueError):
+            srv.personalized([3, 3])
+
+
+# ---------------------------------------------------------------------------
+# batched PPR equivalence
+# ---------------------------------------------------------------------------
+class TestBatchedPPR:
+    @pytest.mark.parametrize("backend", ["auto", "segment_sum"])
+    def test_matches_sequential_5k(self, mid_dg, mid_seed_sets, backend):
+        tol = 1e-4
+        X, certs, stats = ppr_push_batched(
+            mid_dg, mid_seed_sets, alpha=ALPHA, tol=tol, backend=backend)
+        assert X.shape == (5000, len(mid_seed_sets))
+        assert np.all(certs <= tol)
+        view = mid_dg.freeze()
+        for i, s in enumerate(mid_seed_sets):
+            xs, cs, _ = ppr_push(view, s, alpha=ALPHA, tol=tol)
+            # both are within their cert of the same x*, so within the
+            # joint bound of each other
+            gap = float(np.abs(np.asarray(X[:, i], np.float64) - xs).sum())
+            assert gap <= cs + certs[i]
+
+    def test_mixed_tol_per_lane(self, mid_dg, mid_seed_sets):
+        tols = np.array([1e-3, 1e-4, 1e-5, 1e-3, 1e-4, 1e-5])
+        X, certs, stats = ppr_push_batched(
+            mid_dg, mid_seed_sets[:6], alpha=ALPHA, tol=tols,
+            backend="auto")
+        assert np.all(certs <= tols)
+        # lane compaction / freezing: a loose lane never runs longer
+        # than a tight one from the same batch
+        li = np.asarray(stats.lane_iters)
+        assert li.shape == (6,)
+        assert li[0] <= li[2] and li[3] <= li[5]
+
+    def test_single_lane_batch(self, mid_dg, mid_seed_sets):
+        X, certs, stats = ppr_push_batched(
+            mid_dg, mid_seed_sets[:1], alpha=ALPHA, tol=1e-4)
+        assert X.shape == (5000, 1) and certs.shape == (1,)
+        assert certs[0] <= 1e-4
+
+    def test_frozen_view_requires_op(self, mid_dg):
+        view = mid_dg.freeze()
+        with pytest.raises(ValueError):
+            ppr_push_batched(view, [[1], [2]], alpha=ALPHA)
+        X, certs, _ = ppr_push_batched(
+            view, [[1], [2]], alpha=ALPHA, tol=1e-4,
+            op=mid_dg.operator(ALPHA), pt_sp=mid_dg.scipy_pt())
+        assert np.all(certs <= 1e-4)
+
+    def test_scipy_backend_rejects_power(self, mid_dg):
+        with pytest.raises(ValueError):
+            ppr_push_batched(mid_dg, [[1], [2]], backend="scipy",
+                             method="power")
+
+    def test_matches_sequential_50k(self, accept_graph):
+        """Acceptance-scale equivalence on the shared session graph."""
+        dg = DeltaGraph(accept_graph)
+        rng = np.random.default_rng(5)
+        sets = [rng.choice(accept_graph.n, size=2, replace=False)
+                for _ in range(8)]
+        tol = 1e-4
+        X, certs, stats = ppr_push_batched(dg, sets, alpha=ALPHA, tol=tol)
+        assert np.all(certs <= tol)
+        view = dg.freeze()
+        for i in (0, 3, 7):        # spot-check lanes, pushes are ~250ms each
+            xs, cs, _ = ppr_push(view, sets[i], alpha=ALPHA, tol=tol)
+            gap = float(np.abs(np.asarray(X[:, i], np.float64) - xs).sum())
+            assert gap <= cs + certs[i]
+
+
+# ---------------------------------------------------------------------------
+# top-k memoization
+# ---------------------------------------------------------------------------
+class TestTopKMemo:
+    @pytest.fixture()
+    def snap(self, mid_dg):
+        srv = RankServer(mid_dg, alpha=ALPHA, tol=1e-5)
+        return srv.snapshot()
+
+    def test_matches_reference_order(self, snap):
+        x = snap.x
+        ref = np.lexsort((np.arange(snap.n), -x))
+        for k in (1, 10, 17, 100):
+            ids, scores = snap.top_k(k)
+            np.testing.assert_array_equal(ids, ref[:k])
+            np.testing.assert_array_equal(scores, x[ref[:k]])
+
+    def test_memo_reuse_and_prefix_consistency(self, snap):
+        ids100, _ = snap.top_k(100)
+        memo = snap.__dict__["_topk_memo"]
+        assert list(memo) == [128]          # pow2 ceiling of 100
+        ids30, _ = snap.top_k(30)           # re-slices the cached order
+        assert list(memo) == [128]
+        np.testing.assert_array_equal(ids30, ids100[:30])
+        ids3, _ = snap.top_k(3)             # any superset order re-slices
+        assert list(memo) == [128]
+        np.testing.assert_array_equal(ids3, ids100[:3])
+        snap.top_k(300)                     # only a bigger k re-partitions
+        assert sorted(memo) == [128, 512]
+
+    def test_edge_cases(self, snap):
+        ids, scores = snap.top_k(0)
+        assert ids.size == 0 and scores.size == 0
+        ids, scores = snap.top_k(snap.n + 50)   # clamp to n
+        assert ids.size == snap.n
+        assert np.all(np.diff(scores) <= 0)
+
+
+# ---------------------------------------------------------------------------
+# QueryBatcher
+# ---------------------------------------------------------------------------
+class TestBatcher:
+    def test_fuses_concurrent_queries(self, mid_dg):
+        srv = RankServer(mid_dg, alpha=ALPHA, tol=1e-5)
+        batcher = QueryBatcher(srv, max_batch=8, max_delay_s=0.05).attach()
+        try:
+            rng = np.random.default_rng(3)
+            sets = [rng.choice(5000, 2, replace=False) for _ in range(6)]
+            results = [None] * 6
+
+            def q(i):
+                results[i] = srv.personalized(sets[i], tol=1e-4)
+
+            gate = threading.Barrier(6)
+
+            def worker(i):
+                gate.wait()
+                q(i)
+
+            ts = [threading.Thread(target=worker, args=(i,))
+                  for i in range(6)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(timeout=60)
+            assert all(r is not None for r in results)
+            for x, cert, stats in results:
+                assert np.isfinite(cert) and cert <= 1e-4
+            assert batcher.fused_lanes >= 2   # at least one fused batch
+            assert batcher.stats()["max_batch_seen"] >= 2
+        finally:
+            batcher.stop()
+
+    def test_validation_error_is_synchronous(self, mid_dg):
+        srv = RankServer(mid_dg, alpha=ALPHA, tol=1e-5)
+        batcher = QueryBatcher(srv, max_delay_s=0.001).attach()
+        try:
+            with pytest.raises(ValueError):
+                batcher.submit([1, 1], None, 1e-4)
+        finally:
+            batcher.stop()
+
+    def test_stop_detaches_and_rejects(self, mid_dg):
+        srv = RankServer(mid_dg, alpha=ALPHA, tol=1e-5)
+        batcher = QueryBatcher(srv, max_delay_s=0.001).attach()
+        assert srv._ppr_batcher is batcher
+        batcher.stop()
+        assert srv._ppr_batcher is None
+        with pytest.raises(RuntimeError):
+            batcher.submit([1], None, 1e-4)
+        # server still answers (plain push path)
+        x, cert, _ = srv.personalized([1], tol=1e-3)
+        assert cert <= 1e-3
+
+
+# ---------------------------------------------------------------------------
+# QueryRouter
+# ---------------------------------------------------------------------------
+class TestRouter:
+    def _server(self, small_graph):
+        return RankServer(DeltaGraph(small_graph), alpha=ALPHA, tol=1e-5)
+
+    def test_fanout_and_round_robin(self, small_graph):
+        srv = self._server(small_graph)
+        router = QueryRouter(srv, replicas=3, max_version_lag=0)
+        # subscribe() installs the current snapshot immediately
+        assert all(r.snapshot is not None for r in router.replicas)
+        for _ in range(6):
+            ids, scores = router.top_k(5)
+            assert np.all(np.diff(scores) <= 0)
+        served = [r.served for r in router.replicas]
+        assert served == [2, 2, 2]
+        assert router.stats()["rejects"] == 0
+
+    def test_paused_replica_redirects(self, small_graph):
+        srv = self._server(small_graph)
+        router = QueryRouter(srv, replicas=2, max_version_lag=0,
+                             on_stale="redirect")
+        router.replicas[0].pause()
+        srv.ingest(_delta([1], [2]))
+        srv.apply_pending()     # replica 0 now one version behind
+        before = router.redirects
+        for _ in range(4):
+            router.top_k(3)
+        assert router.redirects == before + 2   # every rr hit on replica 0
+        assert router.replicas[1].served >= 4 - before
+        # resume + next publish catches the replica back up
+        router.replicas[0].resume()
+        srv.ingest(_delta([3], [4]))
+        srv.apply_pending()
+        assert router.replicas[0].snapshot.version == srv.dg.version
+        r0_before = router.replicas[0].served
+        for _ in range(2):
+            router.top_k(3)
+        assert router.replicas[0].served == r0_before + 1
+
+    def test_reject_mode_raises(self, small_graph):
+        srv = self._server(small_graph)
+        router = QueryRouter(srv, replicas=1, max_version_lag=0,
+                             on_stale="reject")
+        router.replicas[0].pause()
+        srv.ingest(_delta([5], [6]))
+        srv.apply_pending()
+        with pytest.raises(StalenessBoundExceeded):
+            router.top_k(3)
+        assert router.stats()["rejects"] == 1
+
+    def test_version_lag_tolerance(self, small_graph):
+        srv = self._server(small_graph)
+        router = QueryRouter(srv, replicas=1, max_version_lag=2)
+        router.replicas[0].pause()
+        for i in range(2):      # 2 versions behind: still admissible
+            srv.ingest(_delta([i], [i + 1]))
+            srv.apply_pending()
+        ids, _ = router.top_k(3)
+        assert ids.size == 3
+        assert router.stats()["rejects"] == 0
+
+    def test_replica_local_personalized(self, small_graph):
+        srv = self._server(small_graph)
+        router = QueryRouter(srv, replicas=2, max_version_lag=0)
+        x, cert, _ = router.personalized([42, 99], tol=1e-3)
+        assert np.isfinite(cert) and cert <= 1e-3
+        with pytest.raises(ValueError):
+            router.personalized([42, 42])
+
+
+# ---------------------------------------------------------------------------
+# PPRCache (residual-maintained certification)
+# ---------------------------------------------------------------------------
+class TestCache:
+    @pytest.fixture()
+    def served(self, small_graph):
+        srv = RankServer(DeltaGraph(small_graph), alpha=ALPHA, tol=1e-6)
+        srv.enable_snapshot_ops()
+        cache = PPRCache(alpha=ALPHA, capacity=8)
+        srv._ppr_cache = cache
+        return srv, cache
+
+    def test_same_version_hit(self, served):
+        srv, cache = served
+        x1, c1, s1 = srv.personalized([42, 99], tol=1e-4)
+        assert cache.stats()["puts"] == 1
+        # misses solve at half tol so entries carry survival headroom
+        assert c1 <= 0.5e-4
+        x2, c2, s2 = srv.personalized([42, 99], tol=1e-4)
+        assert getattr(s2, "path", None) == "cache"
+        np.testing.assert_array_equal(x1, x2)
+        assert cache.stats()["hits"] == 1
+
+    def test_key_canonicalization(self, served):
+        srv, cache = served
+        srv.personalized([42, 99], tol=1e-4)
+        _, _, s = srv.personalized([99, 42], tol=1e-4)  # same seed set
+        assert getattr(s, "path", None) == "cache"
+
+    def test_cross_version_survival_and_certified_hit(self, served):
+        srv, cache = served
+        x1, c1, _ = srv.personalized([42, 99], tol=1e-4)
+        # touch only minimal-mass nodes: the residual barely moves
+        cold = np.argsort(np.abs(x1))[:4]
+        srv.ingest(_delta([int(cold[0]), int(cold[1])],
+                          [int(cold[2]), int(cold[3])]))
+        srv.apply_pending()
+        st = cache.stats()
+        assert st["survivals"] >= 1 and st["entries"] == 1
+        x2, c2, s2 = srv.personalized([42, 99], tol=1e-4)
+        assert getattr(s2, "path", None) == "cache"
+        assert s2.served_version > s2.solved_version
+        # the returned bound is a true certificate on the NEW graph
+        v = np.zeros(srv.dg.n)
+        v[[42, 99]] = 0.5
+        ref = solve_linear(srv.dg.operator(ALPHA, v=v), tol=1e-12)
+        err = float(np.abs(np.asarray(ref.x, np.float64) - x2).sum())
+        assert err <= c2 <= 1e-4
+
+    def test_eviction_on_hot_mass_delta(self, served):
+        srv, cache = served
+        x1, _, _ = srv.personalized([42, 99], tol=1e-4)
+        hot = np.argsort(-x1)[:1]
+        cold = np.argsort(np.abs(x1))[:2]
+        # re-wire the hottest node's out-row: dense residual change under
+        # the entry's mass, bound blows past tol -> eager eviction
+        srv.ingest(_delta([int(hot[0])] * 2,
+                          [int(cold[0]), int(cold[1])]))
+        srv.apply_pending()
+        st = cache.stats()
+        assert st["entries"] == 0 and st["evictions"] >= 1
+        _, _, s = srv.personalized([42, 99], tol=1e-4)
+        assert getattr(s, "path", None) != "cache"   # honest re-solve
+
+    def test_version_gap_flushes(self, served):
+        import types
+        _, cache = served
+        cache._version, cache._n = 5, 100
+        cache._entries[b"k"] = object()
+        cache.note_update(types.SimpleNamespace(
+            version=8, n_old=100, n_new=100))    # gap: 5 -> 8
+        st = cache.stats()
+        assert st["flushes"] == 1 and st["entries"] == 0
+        assert st["version"] == 8
+
+    def test_shape_change_flushes(self, served):
+        import types
+        _, cache = served
+        cache._version, cache._n = 3, 100
+        cache._entries[b"k"] = object()
+        cache.note_update(types.SimpleNamespace(
+            version=4, n_old=100, n_new=120))
+        assert cache.stats()["flushes"] == 1
+        assert cache.stats()["entries"] == 0
+
+    def test_lru_capacity(self, small_graph):
+        srv = RankServer(DeltaGraph(small_graph), alpha=ALPHA, tol=1e-6)
+        srv.enable_snapshot_ops()
+        cache = PPRCache(alpha=ALPHA, capacity=2)
+        srv._ppr_cache = cache
+        for s in ([1], [2], [3]):
+            srv.personalized(s, tol=1e-3)
+        st = cache.stats()
+        assert st["entries"] == 2 and st["evictions"] == 1
+        _, _, h = srv.personalized([3], tol=1e-3)     # newest still in
+        assert getattr(h, "path", None) == "cache"
+        _, _, m = srv.personalized([1], tol=1e-3)     # oldest evicted
+        assert getattr(m, "path", None) != "cache"
+
+
+# ---------------------------------------------------------------------------
+# full tier wiring
+# ---------------------------------------------------------------------------
+def test_attach_query_tier_end_to_end(mid_dg):
+    srv = RankServer(mid_dg, alpha=ALPHA, tol=1e-5)
+    batcher, cache, router = attach_query_tier(
+        srv, max_batch=8, max_delay_s=0.005, cache_capacity=8,
+        replicas=2, max_version_lag=1)
+    try:
+        x1, c1, _ = srv.personalized([10, 20], tol=1e-3)
+        assert c1 <= 1e-3
+        _, _, s2 = srv.personalized([10, 20], tol=1e-3)
+        assert getattr(s2, "path", None) == "cache"
+        ids, scores = router.top_k(5)
+        assert ids.size == 5 and np.all(np.diff(scores) <= 0)
+        assert router.stats()["rejects"] == 0
+    finally:
+        batcher.stop()

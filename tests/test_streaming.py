@@ -513,7 +513,7 @@ def test_rank_server_concurrent_serving_stress():
                     assert stale["cert"] <= tol * 1.01
                 else:
                     x, cert, _ = srv.personalized(
-                        rng.integers(0, 1200, 2), tol=1e-2)
+                        rng.choice(1200, 2, replace=False), tol=1e-2)
                     assert np.isfinite(x).all()
         except BaseException as exc:   # surfaced to the main thread
             errors.append(exc)
